@@ -1,0 +1,71 @@
+"""Kernel microbenches: correctness deltas vs oracles + CPU wall times.
+
+Wall times here are interpret-mode (Python) numbers — meaningful only as a
+regression canary; the TPU performance story lives in the §Roofline /
+§Perf analysis where the kernels' VMEM-residency removes the attention
+tile traffic from the memory term.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.moe_gemm import moe_grouped_gemm
+from repro.kernels.moe_gemm.ref import grouped_gemm_ref
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.kernels.ssd import ssd
+from repro.kernels.ssd.ref import ssd_sequential_ref
+
+from .common import emit, timed
+
+
+def run():
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+    out = {}
+
+    q = jax.random.normal(ks[0], (1, 4, 256, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 2, 256, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 2, 256, 64), jnp.float32)
+    res, dt = timed(lambda: jax.block_until_ready(
+        flash_attention_fwd(q, k, v, causal=True, block_q=64, block_kv=64,
+                            interpret=True)))
+    err = float(jnp.abs(res - attention_ref(q, k, v, causal=True)).max())
+    out["flash_attention"] = {"err": err, "s": dt}
+    emit("kernel_flash_attention", dt * 1e6, f"max_err={err:.2e}")
+
+    x = jax.random.normal(ks[3], (512, 512), jnp.float32)
+    w = jax.random.normal(ks[4], (512,), jnp.float32)
+    res, dt = timed(lambda: jax.block_until_ready(rmsnorm(x, w, interpret=True)))
+    err = float(jnp.abs(res - rmsnorm_ref(x, w)).max())
+    out["rmsnorm"] = {"err": err, "s": dt}
+    emit("kernel_rmsnorm", dt * 1e6, f"max_err={err:.2e}")
+
+    Bz, S, H, P, N = 1, 128, 2, 32, 32
+    xs = jax.random.normal(ks[5], (Bz, S, H, P), jnp.float32) * 0.5
+    dts = jax.nn.softplus(jax.random.normal(ks[6], (Bz, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[7], (H,)) * 0.3)
+    B = jax.random.normal(ks[5], (Bz, S, 1, N)) * 0.3
+    C = jax.random.normal(ks[6], (Bz, S, 1, N)) * 0.3
+    D = jnp.ones((H,))
+    res, dt = timed(lambda: jax.block_until_ready(
+        ssd(xs, dts, A, B, C, D, chunk=32, interpret=True)))
+    ref = ssd_sequential_ref(xs, dts, A, jnp.repeat(B, H, 2),
+                             jnp.repeat(C, H, 2), D)
+    err = float(jnp.abs(res - jnp.asarray(ref, jnp.float32)).max())
+    out["ssd"] = {"err": err, "s": dt}
+    emit("kernel_ssd", dt * 1e6, f"max_err={err:.2e}")
+
+    xg = jax.random.normal(ks[0], (4, 128, 256), jnp.float32)
+    wg = jax.random.normal(ks[1], (4, 256, 128), jnp.float32) / 16.0
+    res, dt = timed(lambda: jax.block_until_ready(
+        moe_grouped_gemm(xg, wg, interpret=True)))
+    err = float(jnp.abs(res - grouped_gemm_ref(xg, wg)).max())
+    out["moe_gemm"] = {"err": err, "s": dt}
+    emit("kernel_moe_gemm", dt * 1e6, f"max_err={err:.2e}", out)
+    return out

@@ -1,0 +1,63 @@
+"""Roofline table (§g): reads the dry-run artifacts and prints the
+three-term roofline per (arch x shape x mesh) with dominant bottleneck and
+useful-FLOPs ratio. Run the dry-run first:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from .common import emit
+
+DRYRUN_DIR = pathlib.Path("experiments/dryrun")
+
+
+def load_records():
+    recs = []
+    for p in sorted(DRYRUN_DIR.glob("*.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def run():
+    recs = load_records()
+    if not recs:
+        emit("roofline", 0.0, "no dry-run artifacts; run repro.launch.dryrun")
+        return {}
+    table = {}
+    n_over = 0
+    n_base = 0
+    for r in recs:
+        if r.get("status") != "ok":
+            continue
+        tag = r.get("tag") or ""
+        key = f"{r['arch']}|{r['shape']}|{r['mesh']}" + (f"|{tag}" if tag else "")
+        roof = r["roofline"]
+        mem_gib = r["memory"]["total_per_device"] / 2**30
+        fits = mem_gib <= 16.0
+        if not tag:
+            n_base += 1
+            n_over += 0 if fits else 1
+        bound = max(roof["compute_s"], roof["memory_s"], roof["collective_s"])
+        frac = roof["compute_s"] / bound if bound else 0.0
+        table[key] = {
+            "compute_s": roof["compute_s"], "memory_s": roof["memory_s"],
+            "memory_s_fused": roof.get("memory_s_fused"),
+            "collective_s": roof["collective_s"],
+            "dominant": roof["dominant"],
+            "roofline_fraction": frac,
+            "useful_flops_ratio": r.get("useful_flops_ratio"),
+            "mem_gib_per_device": mem_gib, "fits_hbm": fits,
+            "variant": tag,
+        }
+        name = f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}" + (
+            f"_{tag}" if tag else "")
+        emit(name, bound * 1e6,
+             f"dom={roof['dominant']} frac={frac:.3f} mem={mem_gib:.1f}GiB"
+             f"{'' if fits else ' OVER-HBM'}{' [variant]' if tag else ''}")
+    emit("roofline_table", 0.0,
+         f"{n_base} baseline cells ({n_over} over 16GiB) + "
+         f"{len(table) - n_base} perf variants", table)
+    return table

@@ -1,0 +1,43 @@
+"""Shared benchmark harness utilities."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+import time
+from typing import Callable, Dict, List
+
+RESULTS_DIR = pathlib.Path(os.environ.get("REPRO_BENCH_OUT",
+                                          "experiments/bench"))
+QUICK = os.environ.get("REPRO_BENCH_QUICK", "1") != "0"
+
+# evaluation scale (paper-scale numbers need hours; these defaults keep the
+# full suite ~15 min on this CPU container; REPRO_BENCH_QUICK=0 for more)
+EPISODES = 5 if QUICK else 20
+ONLINE_EPISODES = 6 if QUICK else 30
+PRETRAIN_EPOCHS = 5 if QUICK else 30
+OFFLINE_EPISODES = 4 if QUICK else 20
+HISTORY = 24 if QUICK else 144
+INTERVAL = 1800.0 if QUICK else 600.0
+TRACE_MONTHS = 1 if QUICK else 4
+
+LOAD_LEVELS = {"light": 0.45, "medium": 0.8, "heavy": 1.05}
+
+
+def timed(fn: Callable, *args, repeats: int = 1, **kw):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt
+
+
+def emit(name: str, us_per_call: float, derived: str, payload: Dict = None):
+    """CSV line per the harness contract + JSON artifact."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+    if payload is not None:
+        RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+        (RESULTS_DIR / f"{name}.json").write_text(json.dumps(payload, indent=2,
+                                                             default=float))

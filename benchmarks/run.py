@@ -1,0 +1,37 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV lines; JSON artifacts land in experiments/bench/.
+#
+# Scale knobs: REPRO_BENCH_QUICK=0 for paper-scale episode counts (slow);
+# default is the quick profile (~15 min on this CPU container).
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from . import (bench_interruption, bench_kernels, bench_moe_gating,
+                   bench_roofline, bench_simulator)
+    suites = [
+        ("simulator (Table 1, 5.2)", bench_simulator.run),
+        ("kernels", bench_kernels.run),
+        ("moe gating (4.7)", bench_moe_gating.run),
+        ("roofline (g)", bench_roofline.run),
+        ("interruption (Figs. 8-10, abstract)", bench_interruption.run),
+    ]
+    t0 = time.time()
+    failed = []
+    for name, fn in suites:
+        print(f"# --- {name} ---", flush=True)
+        try:
+            fn()
+        except Exception as e:
+            failed.append(name)
+            print(f"bench_error_{name.split()[0]},0.0,{type(e).__name__}: {e}")
+            traceback.print_exc()
+    print(f"# total wall: {time.time()-t0:.1f}s")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,62 @@
+"""Quickstart: the two planes of this framework in ~60 seconds.
+
+1. control plane — synthesize a cluster trace, replay it through the Slurm
+   simulator, and let two provisioning policies (reactive vs avg) chain a
+   48h sub-job pair;
+2. data plane — pick an architecture (--arch), build its reduced config,
+   and run a few training steps.
+
+Usage:
+  PYTHONPATH=src python examples/quickstart.py [--arch tinyllama-1.1b]
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+
+def control_plane_demo():
+    from repro.core import EnvConfig, ProvisionEnv, build_policy, evaluate
+    from repro.sim import synthesize_trace, trace_stats
+    from repro.sim.trace import V100
+
+    print("=== control plane: Mirage provisioning on a V100-like cluster ===")
+    jobs = synthesize_trace(V100, months=1, seed=0, load_scale=1.0)
+    print("trace:", {k: round(v, 2) for k, v in trace_stats(jobs).items()})
+    env = ProvisionEnv(jobs, EnvConfig(n_nodes=V100.n_nodes, history=24,
+                                       interval=1800.0), seed=0)
+    for method in ("reactive", "avg"):
+        pol = build_policy(method, env)
+        res = evaluate(env, pol, episodes=4, seed=1)
+        print(f"{method:9s} -> {res.summary()}")
+
+
+def data_plane_demo(arch: str):
+    from repro.data import DataConfig, data_iterator
+    from repro.models import registry, transformer
+    from repro.train import OptimizerConfig, init_opt_state, make_train_step
+
+    print(f"=== data plane: {arch} (reduced config) ===")
+    cfg = registry.get_config(arch, smoke=True)
+    params = transformer.init(jax.random.PRNGKey(0), cfg)
+    print(f"params: {transformer.param_count(params):,}")
+    ocfg = OptimizerConfig(lr=3e-3, warmup_steps=5, total_steps=100)
+    opt = init_opt_state(params, ocfg)
+    step = jax.jit(make_train_step(cfg, ocfg))
+    it = data_iterator(cfg, DataConfig(batch=8, seq_len=64))
+    t0 = time.time()
+    for i in range(20):
+        params, opt, metrics = step(params, opt, next(it))
+        if i % 5 == 0:
+            print(f"step {i:3d} loss={float(metrics['loss']):.3f} "
+                  f"({time.time()-t0:.1f}s)")
+    print(f"final loss={float(metrics['loss']):.3f}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    args = ap.parse_args()
+    control_plane_demo()
+    data_plane_demo(args.arch)

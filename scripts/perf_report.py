@@ -1,0 +1,49 @@
+"""Render the §Perf variant comparison from dry-run artifacts.
+
+Usage: PYTHONPATH=src python scripts/perf_report.py [arch filter]
+Groups records by (arch, shape, mesh) and prints baseline + every tagged
+variant with deltas on the three roofline terms and HBM footprint.
+"""
+import json
+import pathlib
+import sys
+from collections import defaultdict
+
+
+def main(filt: str = ""):
+    groups = defaultdict(dict)
+    for p in sorted(pathlib.Path("experiments/dryrun").glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("status") != "ok":
+            continue
+        key = (r["arch"], r["shape"], r["mesh"])
+        groups[key][r.get("tag") or "baseline"] = r
+    for (arch, shape, mesh), recs in sorted(groups.items()):
+        if filt and filt not in arch:
+            continue
+        if len(recs) < 2 and "baseline" in recs:
+            continue
+        base = recs.get("baseline")
+        print(f"\n== {arch} x {shape} x {mesh} ==")
+        print(f"{'variant':>16s} {'GiB/dev':>8s} {'compute_s':>10s} "
+              f"{'memory_s':>9s} {'mem_fused':>9s} {'coll_s':>8s}")
+        for tag in (["baseline"] if base else []) + sorted(
+                t for t in recs if t != "baseline"):
+            r = recs[tag]
+            roof = r["roofline"]
+            gib = r["memory"]["total_per_device"] / 2**30
+            line = (f"{tag:>16s} {gib:8.2f} {roof['compute_s']:10.3f} "
+                    f"{roof['memory_s']:9.3f} "
+                    f"{roof.get('memory_s_fused', roof['memory_s']):9.3f} "
+                    f"{roof['collective_s']:8.3f}")
+            if base and tag != "baseline":
+                b = base["roofline"]
+                bg = base["memory"]["total_per_device"] / 2**30
+                line += (f"   (mem {100*(gib-bg)/bg:+.0f}% "
+                         f"memterm {100*(roof['memory_s']-b['memory_s'])/b['memory_s']:+.0f}% "
+                         f"coll {100*(roof['collective_s']-b['collective_s'])/max(b['collective_s'],1e-9):+.0f}%)")
+            print(line)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "")

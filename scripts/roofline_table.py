@@ -1,0 +1,29 @@
+"""Render the EXPERIMENTS.md roofline table from dry-run artifacts."""
+import json, pathlib, sys
+
+def main(tag_filter=""):
+    rows = []
+    for p in sorted(pathlib.Path("experiments/dryrun").glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("status") != "ok" or (r.get("tag", "") or "") != tag_filter:
+            continue
+        roof = r["roofline"]
+        mem = r["memory"]["total_per_device"] / 2**30
+        bound = max(roof["compute_s"], roof["memory_s"], roof["collective_s"])
+        rows.append((r["arch"], r["shape"], r["mesh"], roof["compute_s"],
+                     roof["memory_s"], roof.get("memory_s_fused", roof["memory_s"]),
+                     roof["collective_s"], roof["dominant"],
+                     roof["compute_s"] / bound if bound else 0,
+                     r.get("useful_flops_ratio") or 0, mem))
+    print("| arch | shape | mesh | compute_s | memory_s | mem_s(kernel-fused) "
+          "| collective_s | dominant | roofline frac | useful FLOPs | GiB/dev |")
+    print("|" + "---|" * 11)
+    order = {"16x16": 0, "2x16x16": 1}
+    rows.sort(key=lambda x: (order[x[2]], x[0], x[1]))
+    for a, s, m, c, me, mf, co, d, f, u, gb in rows:
+        warn = "" if gb <= 16 else " !"
+        print(f"| {a} | {s} | {m} | {c:.3f} | {me:.3f} | {mf:.3f} | {co:.3f} "
+              f"| {d} | {f:.3f} | {u:.2f} | {gb:.1f}{warn} |")
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "")

@@ -1,0 +1,3 @@
+"""repro: Mirage (low-interruption batch-cluster services via RL) on a
+multi-pod JAX training/serving framework."""
+__version__ = "1.0.0"

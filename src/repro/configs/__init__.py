@@ -1,0 +1,2 @@
+"""Architecture configs. One module per assigned architecture (exact
+published numbers) plus the paper's own model (mirage_agent)."""

@@ -1,0 +1,26 @@
+"""Qwen2-VL 7B [arXiv:2409.12191; hf:Qwen/Qwen2-VL-7B].
+
+28L LM backbone, d_model=3584, 28H GQA kv=4, d_ff=18944, vocab=152064,
+M-RoPE with (t,h,w) sections (16,24,24) over head_dim=128. The vision
+encoder is a stub per the assignment: ``input_specs`` provides precomputed
+patch embeddings merged at image-token positions. 28 heads pad to 32 on
+the 16-way model axis; kv=4 is replicated.
+"""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="qwen2-vl-7b",
+    family="vlm",
+    n_layers=28,
+    d_model=3584,
+    n_heads=28,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=18944,
+    vocab_size=152_064,
+    qkv_bias=True,
+    mrope_sections=(16, 24, 24),
+    rope_theta=1_000_000.0,
+    mlp_activation="silu",
+)
+SMOKE = CONFIG.reduced()

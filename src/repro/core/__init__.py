@@ -1,0 +1,11 @@
+"""Mirage core: the paper's contribution — RL-based proactive provisioning."""
+from .agent import (ALL_METHODS, DEFAULT_METHOD, EvalResult,  # noqa: F401
+                    MiragePolicy, build_policy, evaluate,
+                    pretrain_foundation, train_online_dqn, train_online_pg)
+from .dqn import DQNConfig, DQNLearner  # noqa: F401
+from .foundation import FoundationConfig, init_foundation, q_values  # noqa: F401
+from .pg import PGConfig, PGLearner  # noqa: F401
+from .provisioner import EnvConfig, ProvisionEnv, collect_offline_samples  # noqa: F401
+from .replay import ReplayBuffer  # noqa: F401
+from .reward import RewardConfig, shape_reward  # noqa: F401
+from .state import STATE_DIM, StateHistory, encode_snapshot  # noqa: F401

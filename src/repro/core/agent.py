@@ -1,0 +1,225 @@
+"""Mirage: the end-to-end provisioner (§5.1, Fig. 7).
+
+Ties together the foundation models, the DQN / PG learners, the heuristic
+and tree baselines, offline pretraining (§4.9.1) and online on-policy
+training (§4.9.2), plus the evaluation loop used by the §6 benchmarks.
+
+Method registry (the paper's eight): reactive, avg, random_forest,
+xgboost(-style GBDT), transformer+DQN, transformer+PG, MoE+DQN, MoE+PG.
+Mirage's default is MoE+DQN; transformer+PG is the aggressive option
+(§6.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train.optimizer import OptimizerConfig, adamw_update, init_opt_state
+from .baselines import AvgWaitPolicy, ReactivePolicy, TreePolicy
+from .dqn import DQNConfig, DQNLearner
+from .foundation import (FoundationConfig, init_foundation, q_values,
+                         reward_prediction)
+from .pg import PGConfig, PGLearner
+from .provisioner import ProvisionEnv, collect_offline_samples
+from .replay import ReplayBuffer
+from .state import STATE_DIM
+from .trees import GradientBoosting, RandomForest
+
+HOUR = 3600.0
+
+RL_METHODS = ("transformer+dqn", "transformer+pg", "moe+dqn", "moe+pg")
+ALL_METHODS = ("reactive", "avg", "random_forest", "xgboost") + RL_METHODS
+DEFAULT_METHOD = "moe+dqn"          # §6.3: balanced default
+AGGRESSIVE_METHOD = "transformer+pg"
+
+
+# --------------------------------------------------- offline pretraining
+def pretrain_foundation(fc: FoundationConfig, samples: List[Dict],
+                        epochs: int = 30, lr: float = 3e-4, seed: int = 0,
+                        batch_size: int = 16) -> Tuple[Dict, List[float]]:
+    """§4.9.1(b): supervised (state -> observed reward) pretraining of the
+    trunk + V-head. For the MoE model, per-expert temporal sample weights
+    specialize the experts on trace fractions (§4.7)."""
+    params = init_foundation(jax.random.PRNGKey(seed), fc)
+    ocfg = OptimizerConfig(lr=lr, warmup_steps=10, total_steps=max(
+        epochs * max(len(samples) // batch_size, 1), 100), weight_decay=0.0)
+    opt = init_opt_state(params, ocfg)
+    X = np.stack([s["matrix"] for s in samples]).astype(np.float32)
+    y = np.array([s["reward"] for s in samples], np.float32)
+    tp = np.array([s["time_pos"] for s in samples], np.float32)
+
+    def loss_fn(p, xb, yb, tb):
+        pred = reward_prediction(p, fc, xb, tb)
+        return jnp.mean(jnp.square(pred - yb))
+
+    @jax.jit
+    def step(p, o, xb, yb, tb):
+        loss, g = jax.value_and_grad(loss_fn)(p, xb, yb, tb)
+        p, o, _ = adamw_update(g, p, o, ocfg)
+        return p, o, loss
+
+    rng = np.random.default_rng(seed)
+    losses = []
+    n = len(X)
+    for ep in range(epochs):
+        order = rng.permutation(n)
+        tot = 0.0
+        for i in range(0, n, batch_size):
+            ids = order[i:i + batch_size]
+            params, opt, l = step(params, opt, jnp.asarray(X[ids]),
+                                  jnp.asarray(y[ids]), jnp.asarray(tp[ids]))
+            tot += float(l) * len(ids)
+        losses.append(tot / n)
+    return params, losses
+
+
+# ------------------------------------------------------------ online RL
+def train_online_dqn(env: ProvisionEnv, learner: DQNLearner,
+                     episodes: int = 30, replay_capacity: int = 2048,
+                     seed: int = 0) -> List[float]:
+    buf = ReplayBuffer(replay_capacity, learner.fc.history, STATE_DIM, seed)
+    returns = []
+    for ep in range(episodes):
+        obs = env.reset()
+        traj = []
+        done, r, info = False, 0.0, {}
+        while not done:
+            a = learner.act(obs["matrix"], explore=True)
+            nobs, r, done, info = env.step(a)
+            traj.append((obs["matrix"], a, nobs["matrix"], done))
+            obs = nobs
+        # Eq. 8: the outcome reward credits every action of the episode
+        for (s, a, s2, d) in traj:
+            buf.add(s, a, r, s2, d)
+        returns.append(r)
+        if len(buf) >= learner.dc.batch_size:
+            for _ in range(4):
+                learner.train_on(buf.sample(learner.dc.batch_size))
+    return returns
+
+
+def train_online_pg(env: ProvisionEnv, learner: PGLearner,
+                    episodes: int = 30) -> List[float]:
+    returns = []
+    for ep in range(episodes):
+        obs = env.reset()
+        states, actions = [], []
+        done, r = False, 0.0
+        while not done:
+            a = learner.act(obs["matrix"], explore=True)
+            states.append(obs["matrix"])
+            actions.append(a)
+            obs, r, done, info = env.step(a)
+        learner.train_on_episode(np.stack(states), np.asarray(actions), r)
+        returns.append(r)
+    return returns
+
+
+# ------------------------------------------------------------- evaluation
+@dataclasses.dataclass
+class EvalResult:
+    method: str
+    interruptions_h: List[float]
+    overlaps_h: List[float]
+    waits_h: List[float]
+
+    @property
+    def mean_interruption_h(self) -> float:
+        return float(np.mean(self.interruptions_h)) if self.interruptions_h else 0.0
+
+    @property
+    def mean_overlap_h(self) -> float:
+        return float(np.mean(self.overlaps_h)) if self.overlaps_h else 0.0
+
+    @property
+    def zero_interruption_frac(self) -> float:
+        n = len(self.interruptions_h) + len(self.overlaps_h)
+        zero = sum(1 for x in self.interruptions_h if x < 1e-6) + len(self.overlaps_h)
+        return zero / max(n, 1)
+
+    def summary(self) -> Dict[str, float]:
+        return {"mean_interruption_h": self.mean_interruption_h,
+                "mean_overlap_h": self.mean_overlap_h,
+                "zero_interruption_frac": self.zero_interruption_frac,
+                "n_episodes": len(self.interruptions_h) + len(self.overlaps_h)}
+
+
+class MiragePolicy:
+    """Uniform .act(obs) wrapper around any of the eight methods."""
+
+    def __init__(self, method: str, learner=None, tree=None, avg=None):
+        self.method = method
+        self.learner = learner
+        self.tree = tree
+        self.avg = avg or AvgWaitPolicy()
+        self.reactive = ReactivePolicy()
+
+    def act(self, obs: Dict) -> int:
+        if self.method == "reactive":
+            return self.reactive.act(obs)
+        if self.method == "avg":
+            return self.avg.act(obs)
+        if self.method in ("random_forest", "xgboost"):
+            return self.tree.act(obs)
+        return self.learner.act(obs["matrix"], explore=False)
+
+
+def evaluate(env: ProvisionEnv, policy: MiragePolicy, episodes: int = 20,
+             seed: int = 0) -> EvalResult:
+    rng = np.random.default_rng(seed)
+    lo, hi = env._t_start_range
+    starts = rng.uniform(lo, hi, episodes)
+    res = EvalResult(policy.method, [], [], [])
+    for t0 in starts:
+        obs = env.reset(t_start=float(t0))
+        done, info = False, {}
+        while not done:
+            a = policy.act(obs)
+            obs, r, done, info = env.step(a)
+        if info.get("kind") == "interrupt":
+            res.interruptions_h.append(info["amount_s"] / HOUR)
+        else:
+            res.overlaps_h.append(info["amount_s"] / HOUR)
+        res.waits_h.append(info.get("wait_s", 0.0) / HOUR)
+        if policy.method == "avg":
+            policy.avg.observe_wait(info.get("wait_s", 0.0))
+    return res
+
+
+# --------------------------------------------------------------- factory
+def build_policy(method: str, env: ProvisionEnv,
+                 offline_samples: Optional[List[Dict]] = None,
+                 online_episodes: int = 20, pretrain_epochs: int = 10,
+                 history: int = 144, reduced: bool = False,
+                 seed: int = 0) -> MiragePolicy:
+    """Train (if needed) and wrap one of the eight methods."""
+    if method == "reactive":
+        return MiragePolicy(method)
+    if method == "avg":
+        return MiragePolicy(method)
+    assert offline_samples, f"{method} needs offline samples"
+    if method in ("random_forest", "xgboost"):
+        X = np.stack([s["summary"] for s in offline_samples])
+        y = np.array([s["wait_s"] for s in offline_samples], np.float64)
+        model = (RandomForest(n_trees=10, seed=seed) if method == "random_forest"
+                 else GradientBoosting(n_rounds=25, seed=seed))
+        model.fit(X, y)
+        return MiragePolicy(method, tree=TreePolicy(model, method))
+    kind = "moe" if method.startswith("moe") else "transformer"
+    fc = FoundationConfig(kind=kind, history=history)
+    if reduced:
+        fc = fc.reduced()
+        fc = dataclasses.replace(fc, kind=kind, history=history)
+    params, _ = pretrain_foundation(fc, offline_samples,
+                                    epochs=pretrain_epochs, seed=seed)
+    if method.endswith("dqn"):
+        learner = DQNLearner(fc, DQNConfig(), seed=seed, params=params)
+        train_online_dqn(env, learner, episodes=online_episodes, seed=seed)
+    else:
+        learner = PGLearner(fc, PGConfig(), seed=seed, params=params)
+        train_online_pg(env, learner, episodes=online_episodes)
+    return MiragePolicy(method, learner=learner)

@@ -1,0 +1,57 @@
+"""Heuristic provisioning baselines (§6).
+
+* ``reactive`` — the common practice [39]: submit the successor when the
+  predecessor COMPLETES; interruption = the successor's full queue wait.
+* ``avg`` — monitor the average queue wait T_avg and submit the successor
+  T_avg before the predecessor's wall-clock limit expires.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+class ReactivePolicy:
+    """Submit only when the predecessor has ended."""
+
+    name = "reactive"
+
+    def act(self, obs: dict) -> int:
+        return 1 if obs["pred_remaining"] <= 0 else 0
+
+
+class AvgWaitPolicy:
+    """Submit T_avg (rolling mean observed wait) before the predecessor's
+    end; falls back to reactive until an estimate exists."""
+
+    name = "avg"
+
+    def __init__(self, window: int = 50):
+        self.waits = []
+        self.window = window
+
+    def observe_wait(self, wait_s: float) -> None:
+        self.waits.append(wait_s)
+        self.waits = self.waits[-self.window:]
+
+    @property
+    def t_avg(self) -> float:
+        return float(np.mean(self.waits)) if self.waits else 0.0
+
+    def act(self, obs: dict) -> int:
+        return 1 if obs["pred_remaining"] <= self.t_avg else 0
+
+
+class TreePolicy:
+    """Wait-time-regressor policy (RF / GBDT): submit when the predicted
+    successor wait >= the predecessor's remaining time."""
+
+    def __init__(self, model, name: str):
+        self.model = model
+        self.name = name
+
+    def act(self, obs: dict) -> int:
+        pred_wait = float(self.model.predict(obs["summary"][None])[0])
+        return 1 if obs["pred_remaining"] <= max(pred_wait, 0.0) else 0

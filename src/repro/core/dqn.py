@@ -1,0 +1,91 @@
+"""Deep Q-learning for the provisioner (§2.2, §4.9.2; Eqs. 2-4).
+
+Online on-policy training with experience replay and ε-greedy exploration.
+Two credit modes:
+
+* ``paper_credit=True`` (default, Eq. 8): the observed outcome penalty is
+  assigned to every action of the episode — Q regression toward the
+  episode return (Monte-Carlo-style targets, no bootstrap).
+* ``paper_credit=False``: standard one-step TD with a target network,
+  ``R + γ·max_a' Q_target(s', a')``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train.optimizer import OptimizerConfig, adamw_update, init_opt_state
+from .foundation import FoundationConfig, init_foundation, q_values
+
+
+@dataclasses.dataclass
+class DQNConfig:
+    gamma: float = 0.99
+    epsilon: float = 0.1
+    paper_credit: bool = True
+    target_update_every: int = 50
+    lr: float = 1e-4
+    batch_size: int = 32
+
+
+class DQNLearner:
+    def __init__(self, fc: FoundationConfig, dc: DQNConfig, seed: int = 0,
+                 params: Dict = None):
+        self.fc, self.dc = fc, dc
+        key = jax.random.PRNGKey(seed)
+        self.params = params if params is not None else init_foundation(key, fc)
+        self.target_params = jax.tree.map(jnp.copy, self.params)
+        self.ocfg = OptimizerConfig(lr=dc.lr, warmup_steps=10,
+                                    total_steps=100_000, weight_decay=0.0,
+                                    grad_clip=1.0)
+        self.opt_state = init_opt_state(self.params, self.ocfg)
+        self.rng = np.random.default_rng(seed)
+        self._steps = 0
+        self._update = jax.jit(self._make_update())
+        self._q_fn = jax.jit(lambda p, s: q_values(p, self.fc, s))
+
+    def _make_update(self):
+        fc, dc, ocfg = self.fc, self.dc, self.ocfg
+
+        def loss_fn(params, target_params, batch):
+            q = q_values(params, fc, batch["s"])                 # (B,2)
+            qa = jnp.take_along_axis(q, batch["a"][:, None], 1)[:, 0]
+            if dc.paper_credit:
+                target = batch["r"]
+            else:
+                q_next = q_values(target_params, fc, batch["s2"])
+                target = batch["r"] + dc.gamma * jnp.max(q_next, -1) * (
+                    1.0 - batch["done"].astype(jnp.float32))
+            target = jax.lax.stop_gradient(target)
+            return jnp.mean(jnp.square(qa - target))
+
+        def update(params, target_params, opt_state, batch):
+            loss, grads = jax.value_and_grad(loss_fn)(params, target_params,
+                                                      batch)
+            params, opt_state, _ = adamw_update(grads, params, opt_state, ocfg)
+            return params, opt_state, loss
+
+        return update
+
+    # ----------------------------------------------------------- serving
+    def act(self, state_matrix: np.ndarray, explore: bool = True) -> int:
+        """Deterministic policy (§4.4): submit iff Q(submit) > Q(no-submit);
+        ε-greedy exploration during online training."""
+        if explore and self.rng.random() < self.dc.epsilon:
+            return int(self.rng.integers(0, 2))
+        q = self._q_fn(self.params, jnp.asarray(state_matrix[None]))
+        return int(jnp.argmax(q[0]))
+
+    # ----------------------------------------------------------- learning
+    def train_on(self, batch: Dict[str, np.ndarray]) -> float:
+        jb = {k: jnp.asarray(v) for k, v in batch.items()}
+        self.params, self.opt_state, loss = self._update(
+            self.params, self.target_params, self.opt_state, jb)
+        self._steps += 1
+        if self._steps % self.dc.target_update_every == 0:
+            self.target_params = jax.tree.map(jnp.copy, self.params)
+        return float(loss)

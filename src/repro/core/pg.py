@@ -1,0 +1,94 @@
+"""Policy gradient (REINFORCE) for the provisioner (§2.3, Eqs. 5-6).
+
+The P-head outputs submit/no-submit probabilities; actions are sampled
+(non-deterministic policy, §4.4). The Monte-Carlo gradient uses whole
+episodes with the shaped episode return (Eq. 8) and a running-mean
+baseline for variance reduction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train.optimizer import OptimizerConfig, adamw_update, init_opt_state
+from .foundation import FoundationConfig, init_foundation, policy_logits
+
+
+@dataclasses.dataclass
+class PGConfig:
+    lr: float = 1e-4
+    entropy_coef: float = 0.01
+    baseline_momentum: float = 0.9
+
+
+class PGLearner:
+    def __init__(self, fc: FoundationConfig, pc: PGConfig, seed: int = 0,
+                 params: Dict = None):
+        self.fc, self.pc = fc, pc
+        key = jax.random.PRNGKey(seed)
+        self.params = params if params is not None else init_foundation(key, fc)
+        self.ocfg = OptimizerConfig(lr=pc.lr, warmup_steps=10,
+                                    total_steps=100_000, weight_decay=0.0,
+                                    grad_clip=1.0)
+        self.opt_state = init_opt_state(self.params, self.ocfg)
+        self.rng = np.random.default_rng(seed)
+        self.baseline = 0.0
+        self._update = jax.jit(self._make_update())
+        self._logits_fn = jax.jit(lambda p, s: policy_logits(p, self.fc, s))
+
+    def _make_update(self):
+        fc, pc, ocfg = self.fc, self.pc, self.ocfg
+
+        def loss_fn(params, states, actions, advantage, mask):
+            logits = policy_logits(params, fc, states)           # (T,2)
+            logp = jax.nn.log_softmax(logits, -1)
+            lp_a = jnp.take_along_axis(logp, actions[:, None], 1)[:, 0]
+            denom = jnp.maximum(mask.sum(), 1.0)
+            entropy = (-jnp.sum(jnp.exp(logp) * logp, -1) * mask).sum() / denom
+            return (-(lp_a * advantage * mask).sum() / denom
+                    - pc.entropy_coef * entropy)
+
+        def update(params, opt_state, states, actions, advantage, mask):
+            loss, grads = jax.value_and_grad(loss_fn)(params, states, actions,
+                                                      advantage, mask)
+            params, opt_state, _ = adamw_update(grads, params, opt_state, ocfg)
+            return params, opt_state, loss
+
+        return update
+
+    # ----------------------------------------------------------- serving
+    def act(self, state_matrix: np.ndarray, explore: bool = True) -> int:
+        """Sample from the output binomial distribution (§4.4)."""
+        logits = self._logits_fn(self.params,
+                                 jnp.asarray(state_matrix[None]))[0]
+        p = np.asarray(jax.nn.softmax(logits))
+        if explore:
+            return int(self.rng.choice(2, p=p))
+        return int(np.argmax(p))
+
+    # ----------------------------------------------------------- learning
+    def train_on_episode(self, states: np.ndarray, actions: np.ndarray,
+                         episode_return: float, pad_to: int = 32) -> float:
+        """states: (T, k, 40); actions: (T,); the shaped return credits
+        every action of the trajectory (Eq. 6 with r(tau)). Episodes are
+        padded to multiples of ``pad_to`` so the jitted update doesn't
+        retrace on every new episode length."""
+        self.baseline = (self.pc.baseline_momentum * self.baseline
+                         + (1 - self.pc.baseline_momentum) * episode_return)
+        adv = episode_return - self.baseline
+        T = len(actions)
+        Tp = max(-(-T // pad_to) * pad_to, pad_to)
+        sp = np.zeros((Tp,) + states.shape[1:], np.float32)
+        sp[:T] = states
+        ap = np.zeros((Tp,), np.int32)
+        ap[:T] = actions
+        mask = np.zeros((Tp,), np.float32)
+        mask[:T] = 1.0
+        self.params, self.opt_state, loss = self._update(
+            self.params, self.opt_state, jnp.asarray(sp), jnp.asarray(ap),
+            jnp.full((Tp,), adv, jnp.float32), jnp.asarray(mask))
+        return float(loss)

@@ -1,0 +1,185 @@
+"""The Mirage provisioner: episode environment, offline pretraining,
+online RL training, and evaluation (§4.9, §5.1, §6).
+
+Episode protocol (§5.1):
+  1. fresh simulator loaded with the background trace, run to a sampled
+     instant (>= 2-day warm-up);
+  2. the predecessor sub-job is submitted and runs;
+  3. every 10 simulated minutes the agent observes the state matrix and
+     decides submit / no-submit for the successor;
+  4. on submission the simulator runs until the successor STARTS; the
+     outcome (interruption or overlap vs. the predecessor's end) shapes
+     the reward (Eq. 8) credited to the episode's actions.
+
+If the agent never submits before the predecessor's limit expires, the
+environment falls back to reactive submission (the paper's ε-greedy
+online training prevents the infinite-episode case; the fallback bounds
+it in evaluation too).
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.sim.simulator import SlurmSimulator
+from repro.sim.trace import Job
+from repro.sim.workload import SubJobChain, pair_outcome
+from .reward import RewardConfig, shape_reward
+from .state import (SAMPLE_INTERVAL, STATE_DIM, StateHistory, encode_snapshot,
+                    summary_features)
+
+HOUR = 3600.0
+DAY = 24 * HOUR
+
+
+@dataclasses.dataclass
+class EnvConfig:
+    n_nodes: int = 88
+    sub_limit: float = 48 * HOUR
+    chain_nodes: int = 1
+    history: int = 144
+    interval: float = SAMPLE_INTERVAL
+    warmup: float = 2 * DAY
+    reward: RewardConfig = dataclasses.field(default_factory=RewardConfig)
+
+
+class ProvisionEnv:
+    """One predecessor-successor pair per episode (§4.1's P/S protocol)."""
+
+    def __init__(self, trace: Sequence[Job], cfg: EnvConfig, seed: int = 0):
+        self.trace = trace
+        self.cfg = cfg
+        self.rng = np.random.default_rng(seed)
+        self.sim: Optional[SlurmSimulator] = None
+        self.hist: Optional[StateHistory] = None
+        self.pred: Optional[Job] = None
+        self.succ: Optional[Job] = None
+        self.chain: Optional[SubJobChain] = None
+        self._t_start_range = (
+            trace[0].submit_time + cfg.warmup,
+            max(trace[-1].submit_time - 3 * cfg.sub_limit,
+                trace[0].submit_time + cfg.warmup + DAY))
+
+    # ------------------------------------------------------------ helpers
+    def _snapshot(self) -> np.ndarray:
+        s = self.sim.sample()
+        pred_info = None
+        if self.pred is not None:
+            pred_info = {
+                "size": self.pred.n_nodes, "limit": self.pred.time_limit,
+                "queue_time": max(self.pred.wait_time, 0.0),
+                "elapsed": (max(self.sim.now - self.pred.start_time, 0.0)
+                            if self.pred.start_time >= 0 else 0.0),
+            }
+        succ_info = {"size": self.cfg.chain_nodes, "limit": self.cfg.sub_limit}
+        return encode_snapshot(s, self.cfg.n_nodes, self.cfg.sub_limit,
+                               pred_info, succ_info)
+
+    def _advance(self, dt: float) -> None:
+        """Advance in sampling-interval steps, recording history."""
+        end = self.sim.now + dt
+        while self.sim.now + self.cfg.interval <= end:
+            self.sim.step(self.cfg.interval)
+            self.hist.push(self._snapshot())
+        if self.sim.now < end:
+            self.sim.step(end - self.sim.now)
+
+    def obs(self) -> Dict:
+        m = self.hist.matrix()
+        remaining = (self.pred.start_time + self.pred.time_limit - self.sim.now
+                     if self.pred.start_time >= 0 else self.cfg.sub_limit)
+        return {
+            "matrix": m,
+            "summary": summary_features(m),
+            "pred_remaining": remaining,
+            "time_pos": (self.sim.now - self.trace[0].submit_time)
+            / max(self.trace[-1].submit_time - self.trace[0].submit_time, 1.0),
+        }
+
+    # ------------------------------------------------------------ episode
+    def reset(self, t_start: Optional[float] = None) -> Dict:
+        lo, hi = self._t_start_range
+        t0 = t_start if t_start is not None else float(self.rng.uniform(lo, hi))
+        self.sim = SlurmSimulator(self.cfg.n_nodes, mode="fast")
+        self.sim.load([copy.copy(j) for j in self.trace])
+        self.hist = StateHistory(self.cfg.history)
+        self.pred = None
+        self.succ = None
+        # warm up: run to t0 - 24h silently, then fill the history window
+        hist_span = self.cfg.history * self.cfg.interval
+        self.sim.run_until(max(t0 - hist_span, 0.0))
+        self.hist.push(self._snapshot())
+        self._advance(max(t0 - self.sim.now, 0.0))
+        # submit + start the predecessor
+        self.chain = SubJobChain(user_id=int(self.rng.integers(1000, 2000)),
+                                 n_nodes=self.cfg.chain_nodes,
+                                 sub_limit=self.cfg.sub_limit,
+                                 next_id=int(self.rng.integers(10**6, 10**7)))
+        self.pred = self.chain.make_sub(0, self.sim.now)
+        self.sim.submit(self.pred)
+        self.sim.run_until_started(self.pred)
+        self.hist.push(self._snapshot())
+        return self.obs()
+
+    def step(self, action: int) -> Tuple[Dict, float, bool, Dict]:
+        """action: 1=submit successor, 0=wait. Returns (obs, reward, done, info)."""
+        assert self.pred is not None and self.succ is None
+        pred_end = self.pred.start_time + min(self.pred.runtime,
+                                              self.pred.time_limit)
+        forced = False
+        if action == 0:
+            if self.sim.now + self.cfg.interval >= pred_end:
+                forced = True        # limit expired -> reactive fallback
+            else:
+                self._advance(self.cfg.interval)
+                return self.obs(), 0.0, False, {}
+        # submit (possibly forced at the predecessor's end)
+        t_sub = max(self.sim.now, pred_end if forced else self.sim.now)
+        self.sim.run_until(t_sub)
+        self.succ = self.chain.make_sub(1, t_sub)
+        self.sim.submit(self.succ)
+        wait = self.sim.run_until_started(self.succ)
+        if self.pred.end_time < 0:
+            self.pred.end_time = pred_end
+        kind, amount = pair_outcome(self.pred, self.succ)
+        r = shape_reward(kind, amount, self.cfg.reward)
+        info = {"kind": kind, "amount_s": amount, "wait_s": wait,
+                "forced": forced}
+        return self.obs(), r, True, info
+
+
+# ------------------------------------------------------- offline sampling
+def collect_offline_samples(env: ProvisionEnv, n_episodes: int,
+                            n_points: int = 7, seed: int = 0
+                            ) -> List[Dict]:
+    """§4.9.1(a): per episode, probe ``n_points`` evenly spaced submission
+    instants between warm-up and the predecessor's end; record
+    (state matrix, summary, observed reward, outcome)."""
+    rng = np.random.default_rng(seed)
+    samples: List[Dict] = []
+    for ep in range(n_episodes):
+        t0 = float(rng.uniform(*env._t_start_range))
+        for p in range(n_points):
+            frac = (p + 0.5) / n_points
+            obs = env.reset(t_start=t0)
+            # fast-forward to the probe instant, then submit there
+            target = env.pred.start_time + frac * env.cfg.sub_limit
+            done, info, r = False, {}, 0.0
+            while env.sim.now + env.cfg.interval < target and not done:
+                obs, r, done, info = env.step(0)
+            state_at_submit = obs["matrix"]
+            tp = obs["time_pos"]
+            if not done:
+                _, r, done, info = env.step(1)
+            samples.append({
+                "matrix": state_at_submit,
+                "summary": summary_features(state_at_submit),
+                "reward": r,
+                "kind": info.get("kind", ""),
+                "wait_s": info.get("wait_s", 0.0),
+                "time_pos": tp,
+            })
+    return samples

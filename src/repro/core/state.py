@@ -1,0 +1,106 @@
+"""State encoding (§4.1-4.3): the 40-variable snapshot vector and the
+(k x m) state matrix with 10-minute sampling over a 24 h history window.
+
+Variable map (paper §4.1):
+  var1        n_queued
+  var2-6      queued sizes      p0/p25/p50/p75/p100
+  var7-11     queued ages       p0/p25/p50/p75/p100
+  var12-16    queued limits     p0/p25/p50/p75/p100
+  var17       n_running
+  var18-24    running sizes     p0/p25/p50/p75/p100 + mean + std  (7 stats)
+  var25-29    running elapsed   p0/p25/p50/p75/p100
+  var30-34    running limits    p0/p25/p50/p75/p100
+  var35-38    predecessor: size, limit, queue time, elapsed runtime
+  var39-40    successor:   size, limit
+
+All features are normalized (sizes by cluster nodes, times by the 48 h
+limit, counts by /100) so one trained network transfers across clusters
+only in *shape* — per the paper, models must be trained per cluster.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+HOUR = 3600.0
+STATE_DIM = 40
+DEFAULT_HISTORY = 144          # 24h at 10-min sampling
+SAMPLE_INTERVAL = 600.0        # 10 minutes
+
+
+def _pcts(vals: List[float], scale: float) -> np.ndarray:
+    if not vals:
+        return np.zeros(5, np.float32)
+    return (np.percentile(np.asarray(vals, np.float64),
+                          [0, 25, 50, 75, 100]) / scale).astype(np.float32)
+
+
+def encode_snapshot(sample: Dict, n_nodes: int, limit: float,
+                    pred: Optional[Dict] = None,
+                    succ: Optional[Dict] = None) -> np.ndarray:
+    """sample: SlurmSimulator.sample() output -> (40,) float32."""
+    v = np.zeros(STATE_DIM, np.float32)
+    v[0] = sample["n_queued"] / 100.0
+    v[1:6] = _pcts(sample["queued_sizes"], n_nodes)
+    v[6:11] = _pcts(sample["queued_ages"], limit)
+    v[11:16] = _pcts(sample["queued_limits"], limit)
+    v[16] = sample["n_running"] / 100.0
+    rs = sample["running_sizes"]
+    v[17:22] = _pcts(rs, n_nodes)
+    if rs:
+        v[22] = float(np.mean(rs)) / n_nodes
+        v[23] = float(np.std(rs)) / n_nodes
+    v[24:29] = _pcts(sample["running_elapsed"], limit)
+    v[29:34] = _pcts(sample["running_limits"], limit)
+    if pred:
+        v[34] = pred.get("size", 0) / n_nodes
+        v[35] = pred.get("limit", 0) / limit
+        v[36] = pred.get("queue_time", 0) / limit
+        v[37] = pred.get("elapsed", 0) / limit
+    if succ:
+        v[38] = succ.get("size", 0) / n_nodes
+        v[39] = succ.get("limit", 0) / limit
+    return v
+
+
+@dataclasses.dataclass
+class StateHistory:
+    """Ring buffer of snapshot vectors -> the (k, 40) state matrix."""
+    k: int = DEFAULT_HISTORY
+    _buf: Optional[np.ndarray] = None
+    _n: int = 0
+
+    def __post_init__(self):
+        self._buf = np.zeros((self.k, STATE_DIM), np.float32)
+
+    def push(self, v: np.ndarray) -> None:
+        self._buf = np.roll(self._buf, -1, axis=0)
+        self._buf[-1] = v
+        self._n = min(self._n + 1, self.k)
+
+    def matrix(self) -> np.ndarray:
+        """(k, 40): oldest row first; zero-padded during warm-up."""
+        return self._buf.copy()
+
+    @property
+    def filled(self) -> int:
+        return self._n
+
+
+def flatten_state(matrix: np.ndarray, action: int) -> np.ndarray:
+    """Paper §4.3: flattened (k*40 + 1,) with the ordinal action variable
+    appended (1 submit / -1 no-submit / 0 placeholder for the PG head)."""
+    return np.concatenate([matrix.reshape(-1),
+                           np.asarray([action], np.float32)])
+
+
+def summary_features(matrix: np.ndarray) -> np.ndarray:
+    """Compact features for the tree baselines: the current snapshot plus
+    trend deltas over the history window (last - {1h, 6h, 24h} ago)."""
+    cur = matrix[-1]
+    k = matrix.shape[0]
+    idx = [max(0, k - 1 - 6), max(0, k - 1 - 36), 0]
+    deltas = [cur - matrix[i] for i in idx]
+    return np.concatenate([cur] + deltas).astype(np.float32)

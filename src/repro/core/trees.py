@@ -1,0 +1,144 @@
+"""Ensemble-learning baselines (§2.4, §6): Random Forest and gradient-
+boosted decision trees (the paper uses XGBoost; same algorithm family,
+own numpy implementation since xgboost is not in the container).
+
+Both are wait-time regressors over the compact summary features
+(state.summary_features). Serving policy: submit the successor when the
+predecessor's remaining wall-clock is <= the predicted queue wait — the
+learned generalization of the `avg` heuristic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+
+# ------------------------------------------------------------- CART core
+@dataclasses.dataclass
+class _Node:
+    feature: int = -1
+    threshold: float = 0.0
+    left: int = -1
+    right: int = -1
+    value: float = 0.0
+
+
+class RegressionTree:
+    """Depth-limited CART with variance-reduction splits on quantile
+    candidate thresholds (histogram-style)."""
+
+    def __init__(self, max_depth: int = 6, min_leaf: int = 8,
+                 n_thresholds: int = 16, feature_frac: float = 1.0,
+                 seed: int = 0):
+        self.max_depth = max_depth
+        self.min_leaf = min_leaf
+        self.n_thresholds = n_thresholds
+        self.feature_frac = feature_frac
+        self.rng = np.random.default_rng(seed)
+        self.nodes: List[_Node] = []
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "RegressionTree":
+        self.nodes = []
+        self._grow(X, y, 0)
+        return self
+
+    def _grow(self, X, y, depth) -> int:
+        idx = len(self.nodes)
+        self.nodes.append(_Node(value=float(y.mean()) if len(y) else 0.0))
+        if depth >= self.max_depth or len(y) < 2 * self.min_leaf or y.std() < 1e-9:
+            return idx
+        n_feat = X.shape[1]
+        feats = self.rng.choice(
+            n_feat, max(1, int(self.feature_frac * n_feat)), replace=False)
+        best = (0.0, -1, 0.0)  # (gain, feature, threshold)
+        parent_sse = float(((y - y.mean()) ** 2).sum())
+        for f in feats:
+            col = X[:, f]
+            qs = np.unique(np.quantile(col, np.linspace(0.05, 0.95,
+                                                        self.n_thresholds)))
+            for t in qs:
+                m = col <= t
+                nl = int(m.sum())
+                if nl < self.min_leaf or len(y) - nl < self.min_leaf:
+                    continue
+                yl, yr = y[m], y[~m]
+                sse = float(((yl - yl.mean()) ** 2).sum()
+                            + ((yr - yr.mean()) ** 2).sum())
+                gain = parent_sse - sse
+                if gain > best[0]:
+                    best = (gain, f, float(t))
+        if best[1] < 0:
+            return idx
+        _, f, t = best
+        m = X[:, f] <= t
+        node = self.nodes[idx]
+        node.feature, node.threshold = f, t
+        node.left = self._grow(X[m], y[m], depth + 1)
+        node.right = self._grow(X[~m], y[~m], depth + 1)
+        return idx
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        out = np.empty(len(X))
+        for i, x in enumerate(X):
+            n = 0
+            while self.nodes[n].feature >= 0:
+                node = self.nodes[n]
+                n = node.left if x[node.feature] <= node.threshold else node.right
+            out[i] = self.nodes[n].value
+        return out
+
+
+class RandomForest:
+    """Bootstrap-aggregated CART regressors [Breiman 2001]."""
+
+    def __init__(self, n_trees: int = 20, max_depth: int = 8,
+                 feature_frac: float = 0.5, seed: int = 0):
+        self.n_trees, self.max_depth = n_trees, max_depth
+        self.feature_frac = feature_frac
+        self.seed = seed
+        self.trees: List[RegressionTree] = []
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "RandomForest":
+        rng = np.random.default_rng(self.seed)
+        self.trees = []
+        for t in range(self.n_trees):
+            ids = rng.integers(0, len(X), len(X))
+            tree = RegressionTree(max_depth=self.max_depth,
+                                  feature_frac=self.feature_frac,
+                                  seed=self.seed + t)
+            self.trees.append(tree.fit(X[ids], y[ids]))
+        return self
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        return np.mean([t.predict(X) for t in self.trees], axis=0)
+
+
+class GradientBoosting:
+    """Squared-loss gradient boosting [Friedman 2001] (XGBoost stand-in)."""
+
+    def __init__(self, n_rounds: int = 40, max_depth: int = 4,
+                 lr: float = 0.1, seed: int = 0):
+        self.n_rounds, self.max_depth, self.lr = n_rounds, max_depth, lr
+        self.seed = seed
+        self.trees: List[RegressionTree] = []
+        self.base = 0.0
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "GradientBoosting":
+        self.base = float(y.mean())
+        pred = np.full(len(y), self.base)
+        self.trees = []
+        for t in range(self.n_rounds):
+            resid = y - pred
+            tree = RegressionTree(max_depth=self.max_depth, seed=self.seed + t)
+            tree.fit(X, resid)
+            pred = pred + self.lr * tree.predict(X)
+            self.trees.append(tree)
+        return self
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        pred = np.full(len(X), self.base)
+        for t in self.trees:
+            pred = pred + self.lr * t.predict(X)
+        return pred

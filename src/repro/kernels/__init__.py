@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the payload compute hot-spots.
+
+Each kernel package: kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
+ops.py (jit'd wrapper), ref.py (pure-jnp oracle). Validated in
+interpret=True mode on CPU; native on TPU.
+"""
+from . import flash_attention, moe_gemm, rmsnorm, ssd  # noqa: F401

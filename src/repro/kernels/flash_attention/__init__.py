@@ -1,0 +1,3 @@
+from . import ops, ref  # noqa: F401
+from .kernel import flash_attention_fwd  # noqa: F401
+from .ops import flash_attention  # noqa: F401

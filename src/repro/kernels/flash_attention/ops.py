@@ -1,0 +1,24 @@
+"""jit'd public wrapper: (B, S, H, D) layout adapter over the kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "scale", "block_q", "block_kv",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    scale=None, block_q=128, block_kv=128, interpret=False):
+    """Model-layout entry: q (B,Sq,Hq,D), k/v (B,Skv,Hkv,D) -> (B,Sq,Hq,D)."""
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = flash_attention_fwd(qt, kt, vt, causal=causal, window=window,
+                              softcap=softcap, scale=scale, block_q=block_q,
+                              block_kv=block_kv, interpret=interpret)
+    return jnp.swapaxes(out, 1, 2)

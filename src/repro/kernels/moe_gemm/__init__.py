@@ -1,0 +1,3 @@
+from . import ops, ref  # noqa: F401
+from .kernel import grouped_gemm  # noqa: F401
+from .ops import expert_mlp, moe_grouped_gemm  # noqa: F401

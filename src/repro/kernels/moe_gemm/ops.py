@@ -1,0 +1,26 @@
+"""jit'd wrappers: raw grouped GEMM + the fused gated expert MLP built on it."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import grouped_gemm
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def moe_grouped_gemm(x, w, *, interpret: bool = False):
+    return grouped_gemm(x, w, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "interpret"))
+def expert_mlp(x, wi, wo, *, activation: str = "silu",
+               interpret: bool = False):
+    """x: (E, C, d); wi: (E, d, 2, f); wo: (E, f, d)."""
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[activation]
+    E, d, _, f = wi.shape
+    gate = grouped_gemm(x, wi[:, :, 0, :], interpret=interpret)
+    up = grouped_gemm(x, wi[:, :, 1, :], interpret=interpret)
+    h = (act(gate.astype(jnp.float32)) * up.astype(jnp.float32)).astype(x.dtype)
+    return grouped_gemm(h, wo, interpret=interpret)

@@ -1,0 +1,18 @@
+"""Oracles for the grouped expert GEMM and the fused expert MLP."""
+import jax
+import jax.numpy as jnp
+
+
+def grouped_gemm_ref(x, w):
+    """x: (E, C, d); w: (E, d, f)."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)
+
+
+def expert_mlp_ref(x, wi, wo, activation="silu"):
+    """x: (E, C, d); wi: (E, d, 2, f); wo: (E, f, d) — gated expert MLP."""
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[activation]
+    h = jnp.einsum("ecd,edgf->ecgf", x.astype(jnp.float32),
+                   wi.astype(jnp.float32))
+    h = act(h[..., 0, :]) * h[..., 1, :]
+    return jnp.einsum("ecf,efd->ecd", h, wo.astype(jnp.float32)).astype(x.dtype)

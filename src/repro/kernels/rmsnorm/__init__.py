@@ -1,0 +1,3 @@
+from . import ops, ref  # noqa: F401
+from .kernel import rmsnorm_fwd  # noqa: F401
+from .ops import rmsnorm  # noqa: F401

@@ -1,0 +1,18 @@
+"""jit'd wrapper: arbitrary leading dims."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import rmsnorm_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "gemma", "interpret"))
+def rmsnorm(x, w, *, eps: float = 1e-6, gemma: bool = False,
+            interpret: bool = False):
+    shape = x.shape
+    flat = x.reshape(-1, shape[-1])
+    out = rmsnorm_fwd(flat, w, eps=eps, gemma=gemma, interpret=interpret)
+    return out.reshape(shape)

@@ -1,0 +1,13 @@
+"""Pure-jnp RMSNorm oracle."""
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x, w, *, eps=1e-6, gemma=False):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + eps)
+    wf = w.astype(jnp.float32)
+    if gemma:
+        wf = 1.0 + wf
+    return (y * wf).astype(x.dtype)

@@ -1,0 +1,3 @@
+from . import ops, ref  # noqa: F401
+from .kernel import ssd_fwd  # noqa: F401
+from .ops import ssd  # noqa: F401

@@ -1,0 +1,20 @@
+"""jit'd wrapper matching the model substrate's (B,S,G,N) group layout."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, A, B, C, D, *, chunk: int = 128, interpret: bool = False):
+    """x: (Bz,S,H,P); B/C: (Bz,S,G,N) with H % G == 0."""
+    H = x.shape[2]
+    G = B.shape[2]
+    if G != H:
+        B = jnp.repeat(B, H // G, axis=2)
+        C = jnp.repeat(C, H // G, axis=2)
+    return ssd_fwd(x, dt, A, B, C, D, chunk=chunk, interpret=interpret)

@@ -1,0 +1,277 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any jax import (jax locks the device
+count at first init). This module is the ONLY place the 512 placeholder
+devices exist; tests/benches see the real single CPU device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+
+Outputs one JSON per cell with memory_analysis, cost_analysis, collective
+schedule, and the three roofline terms (parsed from the partitioned HLO
+with while-loop trip-count accounting — see repro.roofline.analysis).
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry, transformer
+from repro.models.common import ModelConfig
+from repro.roofline import analysis as ra
+from repro.roofline import hw
+from repro.train.optimizer import OptimizerConfig, init_opt_state
+from repro.train.step import make_prefill_step, make_serve_step, make_train_step
+
+# per-device microbatch targets at train_4k (keeps remat-saved layer
+# activations ~1 sample/layer for the big archs; see DESIGN §6)
+TRAIN_MICROBATCHES = {
+    "deepseek-v2-236b": 16, "command-r-35b": 16, "gemma3-27b": 16,
+    "qwen2-vl-7b": 8, "zamba2-7b": 8, "qwen1.5-4b": 4, "qwen2-moe-a2.7b": 4,
+    "hubert-xlarge": 4, "tinyllama-1.1b": 2, "mamba2-1.3b": 2,
+}
+# bf16 optimizer moments for the largest archs (memory/accuracy trade)
+BF16_OPT_STATE = {"deepseek-v2-236b", "command-r-35b", "gemma3-27b"}
+
+
+def dryrun_config(arch: str, mesh, variant: dict = None) -> ModelConfig:
+    cfg = registry.get_config(arch)
+    msize = shd.axis_size(mesh, "model")
+    cfg = cfg.padded(msize).replace(
+        param_dtype="bfloat16", compute_dtype="bfloat16", attn_impl="chunked")
+    variant = variant or {}
+    if variant.get("moe_scheme"):
+        cfg = cfg.replace(moe_scheme=variant["moe_scheme"])
+    if variant.get("attn_chunk"):
+        cfg = cfg.replace(attn_chunk=variant["attn_chunk"])
+    if variant.get("ssm_chunk"):
+        cfg = cfg.replace(ssm_chunk=variant["ssm_chunk"])
+    if variant.get("remat_save_outputs"):
+        cfg = cfg.replace(remat_save_outputs=True)
+    return cfg
+
+
+def build_cell(arch: str, shape: str, mesh, variant: dict = None):
+    """Returns (fn, arg_structs, in_shardings, donate) for jit+lower."""
+    variant = variant or {}
+    cfg = dryrun_config(arch, mesh, variant)
+    spec = registry.SHAPES[shape]
+    specs = registry.input_specs(cfg, shape)
+    params_shape = jax.eval_shape(lambda: transformer.init(jax.random.PRNGKey(0), cfg))
+    pspecs = shd.params_pspecs(cfg, params_shape, mesh)
+    psh = shd.to_shardings(mesh, pspecs)
+
+    if spec.kind == "train":
+        ocfg = OptimizerConfig(
+            state_dtype="bfloat16" if arch in BF16_OPT_STATE else None)
+        opt_shape = jax.eval_shape(lambda: init_opt_state(params_shape, ocfg))
+        ospecs = shd.opt_state_pspecs(cfg, opt_shape, mesh,
+                                      zero_pod=bool(variant.get("zero_pod")))
+        osh = shd.to_shardings(mesh, ospecs)
+        nm = variant.get("microbatches") or TRAIN_MICROBATCHES.get(arch, 2)
+        baxes = shd.batch_axes(mesh, spec.global_batch)
+        shard_prod = 1
+        for a in baxes:
+            shard_prod *= shd.axis_size(mesh, a)
+        nm = min(nm, max(1, spec.global_batch // shard_prod))
+        while spec.global_batch % nm:
+            nm -= 1
+        step = make_train_step(cfg, ocfg, num_microbatches=nm,
+                               grad_accum_dtype=variant.get("grad_accum"))
+        batch = {k: specs[k] for k in ("inputs", "labels", "positions")}
+        bspecs = shd.train_batch_pspecs(cfg, mesh, batch)
+        bsh = shd.to_shardings(mesh, bspecs)
+        fn = step
+        args = (params_shape, opt_shape, batch)
+        in_sh = (psh, osh, bsh)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        out_sh = (psh, osh, NamedSharding(mesh, P()))
+        donate = (0, 1)
+        meta = {"num_microbatches": nm}
+    elif spec.kind == "prefill":
+        cache_shape = jax.eval_shape(
+            lambda: transformer.init_cache(cfg, spec.global_batch, spec.seq_len,
+                                           dtype=jnp.bfloat16))
+        cspecs = shd.cache_pspecs(cfg, cache_shape, mesh, spec.global_batch,
+                                  mode=variant.get("cache_mode", "seq"))
+        csh = shd.to_shardings(mesh, cspecs)
+        step = make_prefill_step(cfg, s_cache=spec.seq_len)
+        inp = {k: v for k, v in specs.items()}
+        bspecs = shd.train_batch_pspecs(cfg, mesh, inp)
+        bsh = shd.to_shardings(mesh, bspecs)
+        fn = step
+        args = (params_shape, specs["inputs"], specs["positions"])
+        in_sh = (psh, bsh["inputs"], bsh["positions"])
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        baxes = shd.batch_axes(mesh, spec.global_batch) or None
+        logits_sh = NamedSharding(mesh, P(baxes, "model"))
+        out_sh = (logits_sh, csh)
+        donate = ()
+        meta = {}
+    else:  # decode
+        cache_shape = specs["cache"]
+        cspecs = shd.cache_pspecs(cfg, cache_shape, mesh, spec.global_batch,
+                                  mode=variant.get("cache_mode", "seq"))
+        csh = shd.to_shardings(mesh, cspecs)
+        step = make_serve_step(cfg)
+        B = spec.global_batch
+        baxes = shd.batch_axes(mesh, B) or None
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        tok_sh = NamedSharding(mesh, P(baxes, None))
+        if cfg.mrope_sections:
+            pos_sh = NamedSharding(mesh, P(None, baxes, None))
+        else:
+            pos_sh = NamedSharding(mesh, P(baxes, None))
+        idx_sh = NamedSharding(mesh, P())
+        fn = step
+        args = (params_shape, specs["token"], specs["positions"], cache_shape,
+                specs["index"])
+        in_sh = (psh, tok_sh, pos_sh, csh, idx_sh)
+        logits_sh = NamedSharding(mesh, P(baxes, "model"))
+        out_sh = (tok_sh, logits_sh, csh)
+        donate = (3,)
+        meta = {}
+    return cfg, fn, args, in_sh, out_sh, donate, meta
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: pathlib.Path,
+             save_hlo: bool = False, variant: dict = None, tag: str = "") -> dict:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg0 = registry.get_config(arch)
+    ok, why = registry.cell_supported(cfg0, shape)
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+           "status": "skipped", "skip_reason": why}
+    variant = variant or {}
+    if not ok:
+        return rec
+    cfg, fn, args, in_sh, out_sh, donate, meta = build_cell(arch, shape, mesh,
+                                                            variant)
+    spec0 = registry.SHAPES[shape]
+    with shd.activation_context(mesh, spec0.global_batch,
+                                seq_parallel=bool(variant.get("seq_parallel"))):
+        lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=donate).lower(*args)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    roof = ra.roofline_from_text(text)
+    spec = registry.SHAPES[shape]
+    n_tokens = spec.global_batch * (spec.seq_len if spec.kind != "decode" else 1)
+    mf = ra.model_flops(cfg, n_tokens, "train" if spec.kind == "train" else "infer")
+    n_chips = mesh.devices.size
+    rec.update({
+        "status": "ok",
+        "skip_reason": "",
+        "n_chips": n_chips,
+        "meta": meta,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "total_per_device": (mem.argument_size_in_bytes
+                                 + mem.output_size_in_bytes
+                                 + mem.temp_size_in_bytes
+                                 - mem.alias_size_in_bytes),
+            "hbm_limit": hw.HBM_BYTES,
+        },
+        "xla_cost_analysis": {k: ca.get(k) for k in ("flops", "bytes accessed")},
+        "roofline": roof.to_dict(),
+        "model_flops_global": mf,
+        "model_flops_per_device": mf / n_chips,
+        "useful_flops_ratio": (mf / n_chips) / roof.flops if roof.flops else None,
+    })
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    rec["variant"] = variant or {}
+    rec["tag"] = tag
+    path = out_dir / f"{arch}__{shape}__{mesh_name}{suffix}.json"
+    path.write_text(json.dumps(rec, indent=2))
+    if save_hlo:
+        (out_dir / f"{arch}__{shape}__{mesh_name}{suffix}.hlo.txt").write_text(text)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--tag", default="", help="variant tag (output suffix)")
+    ap.add_argument("--moe-scheme", default=None, choices=[None, "topk", "sorted"])
+    ap.add_argument("--cache-mode", default=None, choices=[None, "seq", "heads", "hd"])
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--attn-chunk", type=int, default=None)
+    ap.add_argument("--ssm-chunk", type=int, default=None)
+    ap.add_argument("--remat-save-outputs", action="store_true")
+    ap.add_argument("--grad-accum", default=None, choices=[None, "bf16"])
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--zero-pod", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+    out = pathlib.Path(args.out)
+    variant = {k: v for k, v in dict(
+        moe_scheme=args.moe_scheme, cache_mode=args.cache_mode,
+        microbatches=args.microbatches, attn_chunk=args.attn_chunk,
+        ssm_chunk=args.ssm_chunk,
+        remat_save_outputs=args.remat_save_outputs or None,
+        grad_accum=args.grad_accum,
+        seq_parallel=args.seq_parallel or None,
+        zero_pod=args.zero_pod or None).items() if v}
+
+    cells = []
+    archs = registry.ASSIGNED_ARCHS if (args.all or not args.arch) else (args.arch,)
+    shapes = tuple(registry.SHAPES) if (args.all or not args.shape) else (args.shape,)
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+    n_fail = 0
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                tag = f"{arch} x {shape} x {'2x16x16' if mp else '16x16'}"
+                try:
+                    rec = run_cell(arch, shape, mp, out,
+                                   save_hlo=args.save_hlo, variant=variant,
+                                   tag=args.tag)
+                except Exception as e:
+                    n_fail += 1
+                    print(f"[FAIL] {tag}: {type(e).__name__}: {e}")
+                    traceback.print_exc()
+                    continue
+                if rec["status"] == "skipped":
+                    print(f"[skip] {tag}: {rec['skip_reason']}")
+                else:
+                    m = rec["memory"]["total_per_device"] / 2**30
+                    r = rec["roofline"]
+                    print(f"[ ok ] {tag}: mem/dev={m:.2f}GiB "
+                          f"compute={r['compute_s']*1e3:.2f}ms "
+                          f"memory={r['memory_s']*1e3:.2f}ms "
+                          f"collective={r['collective_s']*1e3:.2f}ms "
+                          f"dominant={r['dominant']} "
+                          f"(compile {rec['compile_s']:.0f}s)")
+    if n_fail:
+        raise SystemExit(f"{n_fail} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state. The dry-run entrypoint sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+import; everything else sees the real single CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh():
+    """1x1 mesh on the real local device(s) — for smoke tests/examples."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

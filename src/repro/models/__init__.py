@@ -1,0 +1,3 @@
+from . import attention, blocks, common, layers, moe, registry, ssm, transformer  # noqa: F401
+from .common import ModelConfig, layer_plan  # noqa: F401
+from .registry import get_config, input_specs, list_archs  # noqa: F401

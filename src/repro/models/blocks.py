@@ -1,0 +1,132 @@
+"""Decoder/encoder block assembly: one function per block kind, three modes.
+
+Block kinds (see ``common.layer_plan``):
+  dense  — attention + MLP
+  local  — sliding-window attention + MLP (gemma3 local layers)
+  global — full attention + MLP (gemma3 global layers)
+  moe    — attention + top-k MoE
+  attn   — attention + MLP in a hybrid stack (zamba2 shared block)
+  mamba  — Mamba2 SSD block
+
+Modes: ``forward`` (no cache), ``prefill`` (cache fill), ``decode`` (one
+token, cache update at ``index``).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import apply_mlp, apply_norm, init_mlp, init_norm
+
+
+def _attn_opts(kind: str, cfg: ModelConfig):
+    if kind == "local":
+        return dict(window=cfg.sliding_window,
+                    theta=cfg.rope_theta_local or cfg.rope_theta)
+    return dict(window=0, theta=cfg.rope_theta)
+
+
+# ------------------------------------------------------------------ init
+def init_block(key, kind: str, cfg: ModelConfig) -> Dict:
+    ks = jax.random.split(key, 4)
+    if kind == "mamba":
+        return {"ln": init_norm(cfg), "mamba": ssm_mod.init_mamba(ks[0], cfg)}
+    p = {"ln1": init_norm(cfg), "ln2": init_norm(cfg)}
+    if cfg.use_mla and kind in ("dense", "moe"):
+        p["attn"] = attn_mod.init_mla(ks[0], cfg)
+    else:
+        p["attn"] = attn_mod.init_attention(ks[0], cfg)
+    if kind == "moe":
+        p["ffn"] = moe_mod.init_moe(ks[1], cfg)
+    elif kind == "dense" and cfg.n_experts and cfg.first_k_dense:
+        # deepseek-style leading dense layer uses the wide dense d_ff
+        p["ffn"] = init_mlp(ks[1], cfg, d_ff=cfg.shared_d_ff or cfg.d_ff)
+    else:
+        p["ffn"] = init_mlp(ks[1], cfg)
+    if cfg.sandwich_norm:
+        p["post_ln1"] = init_norm(cfg)
+        p["post_ln2"] = init_norm(cfg)
+    return p
+
+
+# ------------------------------------------------------------------ apply
+def _attn_part(params, kind, x, cfg, positions, mode, cache, index):
+    opts = _attn_opts(kind, cfg)
+    if cfg.use_mla and kind in ("dense", "moe"):
+        if mode == "forward":
+            return attn_mod.mla_forward(params["attn"], x, cfg, positions), cache
+        if mode == "prefill":
+            return attn_mod.mla_prefill(params["attn"], x, cfg, positions, cache)
+        return attn_mod.mla_decode(params["attn"], x, cfg, positions, cache, index)
+    if mode == "forward":
+        return attn_mod.attn_forward(params["attn"], x, cfg, positions, **opts), cache
+    if mode == "prefill":
+        return attn_mod.attn_prefill(params["attn"], x, cfg, positions, cache, **opts)
+    return attn_mod.attn_decode(params["attn"], x, cfg, positions, cache, index, **opts)
+
+
+def _ffn_part(params, kind, h, cfg) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if kind == "moe":
+        return moe_mod.moe_forward(params["ffn"], h, cfg, scheme=cfg.moe_scheme)
+    return apply_mlp(params["ffn"], h, cfg), jnp.zeros((), jnp.float32)
+
+
+def _ckpt(x, cfg, name):
+    """Tag a tensor for the save-block-outputs remat policy: the tagged
+    values (each block's TP-psum'd output) are kept instead of recomputed,
+    so the backward pass does not re-issue the forward all-reduces."""
+    if cfg.remat_save_outputs:
+        from jax.ad_checkpoint import checkpoint_name
+        return checkpoint_name(x, name)
+    return x
+
+
+def apply_block(params: Dict, kind: str, x: jnp.ndarray, cfg: ModelConfig,
+                positions, mode: str = "forward", cache: Optional[Dict] = None,
+                index=None) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[Dict]]:
+    """Returns (x_out, aux_loss, cache_out)."""
+    if kind == "mamba":
+        h = apply_norm(params["ln"], x, cfg)
+        if mode == "decode":
+            y, cache = ssm_mod.mamba_decode(params["mamba"], h, cfg, cache)
+        elif mode == "prefill":
+            # prefill fills the SSM state cache with the final state
+            y, cache = ssm_mod.mamba_prefill(params["mamba"], h, cfg, cache)
+        else:
+            y = _ckpt(ssm_mod.mamba_forward(params["mamba"], h, cfg), cfg,
+                      "block_out")
+        return x + y, jnp.zeros((), jnp.float32), cache
+
+    if cfg.parallel_block:
+        h = apply_norm(params["ln1"], x, cfg)
+        a, cache = _attn_part(params, kind, h, cfg, positions, mode, cache, index)
+        f, aux = _ffn_part(params, kind, h, cfg)
+        return x + _ckpt(a + f, cfg, "block_out"), aux, cache
+
+    h = apply_norm(params["ln1"], x, cfg)
+    a, cache = _attn_part(params, kind, h, cfg, positions, mode, cache, index)
+    if cfg.sandwich_norm:
+        a = apply_norm(params["post_ln1"], a, cfg)
+    x = x + _ckpt(a, cfg, "block_out")
+    h = apply_norm(params["ln2"], x, cfg)
+    f, aux = _ffn_part(params, kind, h, cfg)
+    if cfg.sandwich_norm:
+        f = apply_norm(params["post_ln2"], f, cfg)
+    return x + _ckpt(f, cfg, "block_out"), aux, cache
+
+
+# ------------------------------------------------------------------ caches
+def init_block_cache(kind: str, cfg: ModelConfig, batch: int, s_cache: int,
+                     dtype=None) -> Dict:
+    if kind == "mamba":
+        return ssm_mod.init_ssm_cache(cfg, batch, dtype)
+    if cfg.use_mla and kind in ("dense", "moe"):
+        return attn_mod.init_mla_cache(cfg, batch, s_cache, dtype)
+    window = cfg.sliding_window if kind == "local" else 0
+    return attn_mod.init_kv_cache(cfg, batch, s_cache, window, dtype)

@@ -1,0 +1,173 @@
+"""Normalization, rotary embeddings, MLP and embedding layers (pure JAX).
+
+Parameters are plain nested dicts of jnp arrays; every layer is a pair of
+``init_*(key, cfg, ...) -> params`` and ``apply`` functions. Initializers
+follow standard truncated-normal fan-in scaling.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig
+
+
+# ----------------------------------------------------------------- init utils
+def dense_init(key, in_dim: int, out_dims, dtype) -> jnp.ndarray:
+    """Fan-in scaled truncated normal init; out_dims may be a tuple."""
+    if isinstance(out_dims, int):
+        out_dims = (out_dims,)
+    shape = (in_dim,) + tuple(out_dims)
+    std = 1.0 / math.sqrt(in_dim)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype) -> jnp.ndarray:
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (vocab, dim), jnp.float32)).astype(dtype)
+
+
+# ----------------------------------------------------------------------- norm
+def init_norm(cfg: ModelConfig, dim: Optional[int] = None):
+    d = dim or cfg.d_model
+    if cfg.norm_style == "layer":
+        return {"scale": jnp.ones((d,), cfg.pdtype), "bias": jnp.zeros((d,), cfg.pdtype)}
+    scale = jnp.zeros((d,), cfg.pdtype) if cfg.gemma_norm else jnp.ones((d,), cfg.pdtype)
+    return {"scale": scale}
+
+
+def apply_norm(params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """RMSNorm / LayerNorm in fp32, cast back to input dtype."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    if cfg.norm_style == "layer":
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+        y = (x - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+        return y.astype(dtype)
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(ms + cfg.norm_eps)
+    scale = params["scale"].astype(jnp.float32)
+    if cfg.gemma_norm:
+        scale = 1.0 + scale
+    return (y * scale).astype(dtype)
+
+
+# ----------------------------------------------------------------------- rope
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs    # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]                # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+                sections: Tuple[int, ...]) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE.
+
+    positions: (3, B, S) (temporal, height, width); ``sections`` gives the
+    number of rotary half-dims assigned to each component (sums to D/2).
+    For pure text all three position streams are identical, which makes
+    M-RoPE collapse to standard RoPE — the property tests rely on this.
+    """
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    # angles per stream: (3, B, S, D/2)
+    angles = positions[..., None].astype(jnp.float32) * freqs
+    # select the stream per frequency slot
+    idx = jnp.repeat(jnp.arange(len(sections)), jnp.array(sections), total_repeat_length=half)
+    merged = jnp.take_along_axis(
+        jnp.moveaxis(angles, 0, -1), idx[None, None, :, None], axis=-1)[..., 0]
+    cos = jnp.cos(merged)[..., None, :]
+    sin = jnp.sin(merged)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------------ mlp
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None, d_in: Optional[int] = None):
+    dff = d_ff or cfg.d_ff
+    din = d_in or cfg.d_model
+    ks = jax.random.split(key, 3)
+    p = {"wo": dense_init(ks[2], dff, din, cfg.pdtype)}
+    if cfg.gated_mlp:
+        p["wi"] = dense_init(ks[0], din, (2, dff), cfg.pdtype)  # fused gate+up
+    else:
+        p["wi"] = dense_init(ks[0], din, dff, cfg.pdtype)
+    if cfg.mlp_bias:
+        p["bi"] = jnp.zeros((2, dff) if cfg.gated_mlp else (dff,), cfg.pdtype)
+        p["bo"] = jnp.zeros((din,), cfg.pdtype)
+    return p
+
+
+def apply_mlp(params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    act = _act(cfg.mlp_activation)
+    wi = params["wi"].astype(cfg.cdtype)
+    wo = params["wo"].astype(cfg.cdtype)
+    if cfg.gated_mlp:
+        h = jnp.einsum("...d,dgf->...gf", x, wi)
+        if "bi" in params:
+            h = h + params["bi"].astype(cfg.cdtype)
+        gate, up = h[..., 0, :], h[..., 1, :]
+        h = act(gate) * up
+    else:
+        h = jnp.einsum("...d,df->...f", x, wi)
+        if "bi" in params:
+            h = h + params["bi"].astype(cfg.cdtype)
+        h = act(h)
+    out = jnp.einsum("...f,fd->...d", h, wo)
+    if "bo" in params:
+        out = out + params["bo"].astype(cfg.cdtype)
+    return out
+
+
+# ------------------------------------------------------------------ embedding
+def init_embedding(key, cfg: ModelConfig):
+    p = {"table": embed_init(key, cfg.vocab, cfg.d_model, cfg.pdtype)}
+    return p
+
+
+def embed_tokens(params, tokens: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    x = jnp.take(params["table"].astype(cfg.cdtype), tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.cdtype)
+    return x
+
+
+def lm_logits(params, x: jnp.ndarray, cfg: ModelConfig, embed_params=None) -> jnp.ndarray:
+    """Final projection to (padded) vocab, fp32 logits."""
+    if cfg.tie_embeddings:
+        table = embed_params["table"]
+        logits = jnp.einsum("...d,vd->...v", x.astype(jnp.float32), table.astype(jnp.float32))
+    else:
+        logits = jnp.einsum("...d,dv->...v", x.astype(jnp.float32),
+                            params["head"].astype(jnp.float32))
+    if cfg.final_logit_softcap:
+        c = cfg.final_logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    return logits
+
+
+def init_lm_head(key, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return {}
+    return {"head": dense_init(key, cfg.d_model, cfg.vocab, cfg.pdtype)}

@@ -1,0 +1,190 @@
+"""Mixture-of-Experts layers.
+
+Two gating schemes, both used in this repo:
+
+* ``topk_moe`` — sparse top-k routing with GShard-style capacity dispatch
+  (einsum one-hot dispatch/combine tensors; shards cleanly under SPMD with
+  the expert dim on the `model` mesh axis). Used by the payload MoE archs
+  (deepseek-v2: 160e top-6 + 2 shared; qwen2-moe: 60e top-4 + 4 shared).
+* ``dense_moe`` — the paper's Eq. 7 softmax-weighted average over *all*
+  experts (no sparsity). This is the scheme Mirage's MoE foundation model
+  uses (§4.7 found dense averaging beats top-1 for provisioning); also kept
+  here so the payload substrate and the agent share one implementation.
+
+An alternative sort-based (dropless-ish) dispatch is provided for the perf
+hillclimb; see ``topk_moe_sorted``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig
+from .layers import _act, dense_init
+
+
+def init_experts(key, cfg: ModelConfig, n_experts: int, d_ff: int) -> Dict:
+    ks = jax.random.split(key, 2)
+    d = cfg.d_model
+    # stacked gated-MLP expert weights: (E, d, 2, ff) and (E, ff, d)
+    wi = jax.vmap(lambda k: dense_init(k, d, (2, d_ff), cfg.pdtype))(
+        jax.random.split(ks[0], n_experts))
+    wo = jax.vmap(lambda k: dense_init(k, d_ff, d, cfg.pdtype))(
+        jax.random.split(ks[1], n_experts))
+    return {"wi": wi, "wo": wo}
+
+
+def init_moe(key, cfg: ModelConfig) -> Dict:
+    ks = jax.random.split(key, 3)
+    p = {
+        "router": dense_init(ks[0], cfg.d_model, cfg.n_experts, jnp.float32),
+        "experts": init_experts(ks[1], cfg, cfg.n_experts, cfg.expert_d_ff),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_experts(ks[2], cfg, cfg.n_shared_experts,
+                                   cfg.shared_d_ff or cfg.expert_d_ff)
+    return p
+
+
+def _expert_ffn(experts: Dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """x: (E, B, C, d) -> (E, B, C, d); E is the stacked expert dim."""
+    act = _act(cfg.mlp_activation)
+    h = jnp.einsum("ebcd,edgf->ebcgf", x,
+                   experts["wi"].astype(cfg.cdtype))  # (E,B,C,2,ff)
+    gate, up = h[..., 0, :], h[..., 1, :]
+    h = act(gate) * up
+    return jnp.einsum("ebcf,efd->ebcd", h, experts["wo"].astype(cfg.cdtype))
+
+
+def _shared_ffn(shared: Dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Shared experts applied to every token; x: (..., d)."""
+    act = _act(cfg.mlp_activation)
+    h = jnp.einsum("...d,edgf->...egf", x, shared["wi"].astype(cfg.cdtype))
+    gate, up = h[..., 0, :], h[..., 1, :]
+    h = act(gate) * up
+    return jnp.einsum("...ef,efd->...d", h, shared["wo"].astype(cfg.cdtype))
+
+
+def topk_moe(params: Dict, x: jnp.ndarray, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Capacity-based top-k MoE. x: (B, S, d) -> (y, aux_loss).
+
+    Dispatch/combine are one-hot einsum tensors (B,S,E,C); the expert dim is
+    shardable on the `model` axis, B on `data`. Tokens overflowing an
+    expert's capacity are dropped (their contribution is only the shared
+    experts / residual) — standard GShard semantics.
+
+    Long sequences are routed in `moe_group_size`-token capacity groups
+    (GShard "groups"): capacity C scales with the group, not the sequence,
+    so dispatch bytes stay O(S·E·C_g) instead of O(S·E·C_S) — measured 8x
+    smaller at prefill_32k (EXPERIMENTS §Perf).
+    """
+    B0, S0, d = x.shape
+    g = max(1, min(cfg.moe_group_size, S0))
+    if S0 % g == 0 and S0 > g:
+        x = x.reshape(B0 * (S0 // g), g, d)
+    B, S, _ = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = max(1, int(math.ceil(S * K * cfg.capacity_factor / E)))
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, K)                    # (B,S,K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)          # (B,S,K,E)
+    flat = onehot.reshape(B, S * K, E)
+    pos = jnp.cumsum(flat, axis=1) * flat - 1.0                 # (B,S*K,E)
+    pos = pos.reshape(B, S, K, E)
+    keep = (pos >= 0) & (pos < C)
+    pos = jnp.where(keep, pos, 0).astype(jnp.int32)
+    slot = jax.nn.one_hot(pos, C, dtype=jnp.float32) * keep[..., None]  # (B,S,K,E,C)
+    dispatch = slot.sum(axis=2)                                          # (B,S,E,C)
+    combine = (slot * gate_vals[..., None, None]).sum(axis=2)            # (B,S,E,C)
+
+    xin = jnp.einsum("bsec,bsd->ebcd", dispatch.astype(cfg.cdtype), x)   # (E,B,C,d)
+    yout = _expert_ffn(params["experts"], xin, cfg)                      # (E,B,C,d)
+    y = jnp.einsum("ebcd,bsec->bsd", yout, combine.astype(cfg.cdtype))
+
+    if "shared" in params:
+        y = y + _shared_ffn(params["shared"], x, cfg)
+
+    # load-balance auxiliary loss (Switch/GShard form)
+    frac_tokens = onehot.sum(axis=(1, 2)) / S                    # (B,E) tokens routed
+    frac_prob = probs.mean(axis=1)                               # (B,E)
+    aux = cfg.router_aux_coef * E * jnp.mean(jnp.sum(frac_tokens * frac_prob, axis=-1))
+    return y.reshape(B0, S0, d), aux
+
+
+def topk_moe_sorted(params: Dict, x: jnp.ndarray, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sort-based dispatch: argsort tokens by expert, contiguous gather, then
+    block GEMMs per expert bucket. Avoids the (B,S,E,C) one-hot tensors —
+    memory term optimization evaluated in §Perf. Same drop semantics.
+    """
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = max(1, int(math.ceil(S * K * cfg.capacity_factor / E)))
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    tok_exp = idx.reshape(B, S * K)                              # expert per (token,k)
+    order = jnp.argsort(tok_exp, axis=1, stable=True)            # (B,S*K)
+    sorted_exp = jnp.take_along_axis(tok_exp, order, axis=1)
+    src_tok = order // K                                         # original token id
+    # position within the expert bucket
+    same = jax.nn.one_hot(sorted_exp, E, dtype=jnp.int32)
+    pos_in_e = jnp.cumsum(same, axis=1) - same
+    pos = jnp.take_along_axis(pos_in_e, sorted_exp[..., None], axis=2)[..., 0]
+    keep = pos < C
+    dest = sorted_exp * C + jnp.where(keep, pos, 0)              # (B,S*K) slot id
+    gathered = jnp.take_along_axis(x, src_tok[..., None], axis=1)  # (B,S*K,d)
+    buckets = jnp.zeros((B, E * C, d), x.dtype)
+    buckets = jax.vmap(lambda b, dd, g, kp: b.at[dd].add(g * kp[:, None].astype(g.dtype)))(
+        buckets, dest, gathered, keep)
+    xin = buckets.reshape(B, E, C, d).transpose(1, 0, 2, 3)       # (E,B,C,d)
+    yout = _expert_ffn(params["experts"], xin, cfg)               # (E,B,C,d)
+    flat_out = yout.transpose(1, 0, 2, 3).reshape(B, E * C, d)
+    g_sorted = jnp.take_along_axis(gate_vals.reshape(B, S * K), order, axis=1)
+    pulled = jax.vmap(lambda f, dd: f[dd])(flat_out, dest)        # (B,S*K,d)
+    pulled = pulled * (g_sorted * keep)[..., None].astype(pulled.dtype)
+    y = jnp.zeros_like(x)
+    y = jax.vmap(lambda yy, st, pl: yy.at[st].add(pl))(y, src_tok, pulled)
+
+    if "shared" in params:
+        y = y + _shared_ffn(params["shared"], x, cfg)
+    frac_tokens = jax.nn.one_hot(idx, E).sum(axis=(1, 2)) / S
+    frac_prob = probs.mean(axis=1)
+    aux = cfg.router_aux_coef * E * jnp.mean(jnp.sum(frac_tokens * frac_prob, axis=-1))
+    return y, aux
+
+
+def dense_moe(params: Dict, x: jnp.ndarray, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Eq. 7: softmax-gated weighted average over all experts (no dropping).
+
+    Used by the Mirage agent's MoE foundation model; E is small (default 10)
+    so running every expert on every token is the point, not a bug.
+    """
+    logits = jnp.einsum("...d,de->...e", x.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    gates = jax.nn.softmax(logits, axis=-1)                      # (...,E)
+    act = _act(cfg.mlp_activation)
+    h = jnp.einsum("...d,edgf->...egf", x, params["experts"]["wi"].astype(cfg.cdtype))
+    gate, up = h[..., 0, :], h[..., 1, :]
+    h = act(gate) * up
+    y_e = jnp.einsum("...ef,efd->...ed", h, params["experts"]["wo"].astype(cfg.cdtype))
+    y = jnp.einsum("...ed,...e->...d", y_e, gates.astype(cfg.cdtype))
+    return y, jnp.zeros((), jnp.float32)
+
+
+def moe_forward(params: Dict, x: jnp.ndarray, cfg: ModelConfig,
+                scheme: str = "topk") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if scheme == "dense":
+        return dense_moe(params, x, cfg)
+    if scheme == "sorted":
+        return topk_moe_sorted(params, x, cfg)
+    return topk_moe(params, x, cfg)

@@ -1,0 +1,121 @@
+"""Architecture registry: ``--arch <id>`` resolution + input shape specs.
+
+The four assigned input-shape cells per LM architecture:
+
+  train_4k     seq 4,096  global_batch 256   -> lowers train_step
+  prefill_32k  seq 32,768 global_batch 32    -> lowers prefill
+  decode_32k   seq 32,768 global_batch 128   -> lowers serve_step (1 token)
+  long_500k    seq 524,288 global_batch 1    -> lowers serve_step (1 token)
+
+Skips (documented in DESIGN §4): long_500k for full-attention archs,
+decode shapes for encoder-only archs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig
+
+_ARCH_MODULES = {
+    "deepseek-v2-236b": "repro.configs.deepseek_v2_236b",
+    "qwen2-moe-a2.7b": "repro.configs.qwen2_moe_a2_7b",
+    "command-r-35b": "repro.configs.command_r_35b",
+    "tinyllama-1.1b": "repro.configs.tinyllama_1_1b",
+    "qwen1.5-4b": "repro.configs.qwen1_5_4b",
+    "gemma3-27b": "repro.configs.gemma3_27b",
+    "mamba2-1.3b": "repro.configs.mamba2_1_3b",
+    "qwen2-vl-7b": "repro.configs.qwen2_vl_7b",
+    "zamba2-7b": "repro.configs.zamba2_7b",
+    "hubert-xlarge": "repro.configs.hubert_xlarge",
+    "mirage-agent": "repro.configs.mirage_agent",
+}
+
+ASSIGNED_ARCHS = tuple(k for k in _ARCH_MODULES if k != "mirage-agent")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def list_archs() -> Tuple[str, ...]:
+    return tuple(_ARCH_MODULES)
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    mod = importlib.import_module(_ARCH_MODULES[arch])
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def cell_supported(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    """Is (arch x shape) a runnable dry-run cell? Returns (ok, reason)."""
+    spec = SHAPES[shape]
+    if spec.kind == "decode" and not cfg.supports_decode:
+        return False, "encoder-only: no autoregressive decode"
+    if shape == "long_500k" and not cfg.supports_long_context:
+        return False, "full attention is quadratic at 500k (skip per assignment)"
+    return True, ""
+
+
+def runnable_cells():
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            ok, why = cell_supported(cfg, shape)
+            yield arch, shape, ok, why
+
+
+def input_specs(cfg: ModelConfig, shape: str, dtype=jnp.int32):
+    """ShapeDtypeStruct stand-ins for every model input of a cell.
+
+    No device allocation — suitable for .lower() on a 512-device host mesh.
+    """
+    spec = SHAPES[shape]
+    B, S = spec.global_batch, spec.seq_len
+    sds = jax.ShapeDtypeStruct
+
+    def pos_struct(b, s):
+        if cfg.mrope_sections:
+            return sds((3, b, s), jnp.int32)
+        return sds((b, s), jnp.int32)
+
+    if spec.kind == "train":
+        if not cfg.embed_inputs:  # audio: precomputed frame embeddings
+            return {"inputs": sds((B, S, cfg.d_model), jnp.bfloat16),
+                    "labels": sds((B, S), jnp.int32),
+                    "positions": pos_struct(B, S)}
+        return {"inputs": sds((B, S), jnp.int32),
+                "labels": sds((B, S), jnp.int32),
+                "positions": pos_struct(B, S)}
+    if spec.kind == "prefill":
+        if not cfg.embed_inputs:
+            return {"inputs": sds((B, S, cfg.d_model), jnp.bfloat16),
+                    "positions": pos_struct(B, S)}
+        return {"inputs": sds((B, S), jnp.int32),
+                "positions": pos_struct(B, S)}
+    # decode: one new token against an S-token cache
+    from . import transformer
+    cache = jax.eval_shape(
+        lambda: transformer.init_cache(cfg, B, S, dtype=jnp.bfloat16))
+    return {"token": sds((B, 1), jnp.int32),
+            "positions": pos_struct(B, 1),
+            "cache": cache,
+            "index": sds((), jnp.int32)}

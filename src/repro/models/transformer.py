@@ -1,0 +1,264 @@
+"""Model assembly: heterogeneous scan-over-layers, train / prefill / decode.
+
+The layer plan (``common.layer_plan``) turns each architecture into a list of
+``Segment``s; parameters of each segment position are stacked over the
+segment's repeat count and the segment body is a single ``lax.scan`` step
+(optionally ``jax.checkpoint``-rematerialised). Tied blocks (zamba2's shared
+attention) keep a single parameter tree that is closed over by the scan body
+while their per-application KV caches remain stacked.
+
+This keeps the lowered HLO size O(#segment kinds), not O(#layers) — which is
+what makes the 40-cell dry-run compile in reasonable time and is also the
+production configuration (scan + remat).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, Segment, layer_plan
+from .blocks import apply_block, init_block, init_block_cache
+from .layers import (apply_norm, embed_tokens, init_embedding, init_lm_head,
+                     init_norm, lm_logits)
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------- init
+def init(key, cfg: ModelConfig) -> Dict:
+    plan = layer_plan(cfg)
+    keys = jax.random.split(key, 3 + len(plan))
+    params: Dict[str, Any] = {}
+    if cfg.embed_inputs:
+        params["embed"] = init_embedding(keys[0], cfg)
+    segs = []
+    for si, seg in enumerate(plan):
+        skey = keys[3 + si]
+        seg_params: Dict[str, Any] = {}
+        pkeys = jax.random.split(skey, len(seg.pattern))
+        for j, kind in enumerate(seg.pattern):
+            name = f"b{j}"
+            if seg.shared[j]:
+                seg_params[name] = init_block(pkeys[j], kind, cfg)
+            elif seg.n_repeat == 1:
+                seg_params[name] = jax.tree.map(
+                    lambda a: a[None], init_block(pkeys[j], kind, cfg))
+            else:
+                seg_params[name] = jax.vmap(
+                    lambda k, kd=kind: init_block(k, kd, cfg))(
+                        jax.random.split(pkeys[j], seg.n_repeat))
+        segs.append(seg_params)
+    params["segments"] = segs
+    params["final_norm"] = init_norm(cfg)
+    params.update(init_lm_head(keys[1], cfg))
+    return params
+
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+# ------------------------------------------------------------------- segments
+def _split_shared(seg: Segment, seg_params: Dict):
+    stacked = {f"b{j}": seg_params[f"b{j}"] for j in range(len(seg.pattern))
+               if not seg.shared[j]}
+    shared = {f"b{j}": seg_params[f"b{j}"] for j in range(len(seg.pattern))
+              if seg.shared[j]}
+    return stacked, shared
+
+
+def _apply_segment(seg: Segment, seg_params: Dict, seg_cache: Optional[Dict],
+                   x: jnp.ndarray, aux: jnp.ndarray, cfg: ModelConfig,
+                   positions, mode: str, index, s_cache: Optional[int] = None):
+    stacked, shared = _split_shared(seg, seg_params)
+
+    from repro.dist.sharding import constrain
+
+    if mode == "prefill":
+        # the cache is PRODUCED by the scan (ys); no zero-filled input buffer
+        B = x.shape[0]
+
+        def body(carry, st_i):
+            xx, acc = carry
+            new_cache = {}
+            for j, kind in enumerate(seg.pattern):
+                name = f"b{j}"
+                p = shared[name] if seg.shared[j] else st_i[name]
+                c = init_block_cache(kind, cfg, B, s_cache, dtype=cfg.cdtype)
+                xx, a, c_out = apply_block(p, kind, xx, cfg, positions, mode,
+                                           c, index)
+                acc = acc + a
+                new_cache[name] = c_out
+            return (xx, acc), new_cache
+
+        (x, aux), cache_out = jax.lax.scan(body, (x, aux), stacked,
+                                           length=seg.n_repeat)
+        return x, aux, cache_out
+
+    if mode == "decode":
+        # Decode threads the (stacked) cache through the scan CARRY with
+        # per-layer indexed reads/writes: while-loop carries are aliased in
+        # place by XLA, so the multi-GB cache stays single-buffered. Passing
+        # it as xs/ys would double-buffer it (measured: 2x cache in temp).
+        def body(carry, st_i):
+            xx, acc, cache_all, li = carry
+            new_layer_cache = {}
+            for j, kind in enumerate(seg.pattern):
+                name = f"b{j}"
+                p = shared[name] if seg.shared[j] else st_i[name]
+                c = jax.tree.map(
+                    lambda buf: jax.lax.dynamic_index_in_dim(buf, li, 0,
+                                                             keepdims=False),
+                    cache_all[name])
+                xx, a, c_out = apply_block(p, kind, xx, cfg, positions, mode,
+                                           c, index)
+                acc = acc + a
+                new_layer_cache[name] = c_out
+            cache_all = jax.tree.map(
+                lambda buf, upd: jax.lax.dynamic_update_index_in_dim(
+                    buf, upd.astype(buf.dtype), li, 0),
+                cache_all, new_layer_cache)
+            return (xx, acc, cache_all, li + 1), None
+
+        (x, aux, cache_out, _), _ = jax.lax.scan(
+            body, (x, aux, seg_cache, jnp.zeros((), jnp.int32)), stacked,
+            length=seg.n_repeat)
+        return x, aux, cache_out
+
+    def body(carry, xs):
+        xx, acc = carry
+        st_i, cache_i = xs
+        new_cache = {}
+        xx = constrain(xx, "B", "S", None)
+        for j, kind in enumerate(seg.pattern):
+            name = f"b{j}"
+            p = shared[name] if seg.shared[j] else st_i[name]
+            c = None if cache_i is None else cache_i[name]
+            xx, a, c_out = apply_block(p, kind, xx, cfg, positions, mode, c, index)
+            acc = acc + a
+            if cache_i is not None:
+                new_cache[name] = c_out
+        xx = constrain(xx, "B", "S", None)
+        return (xx, acc), (new_cache if cache_i is not None else None)
+
+    if cfg.remat and mode == "forward":
+        if cfg.remat_save_outputs:
+            # keep each block's TP-psum'd output: the backward pass reuses
+            # them instead of re-running the forward all-reduces (trades
+            # ~1 residual-sized save per block for 1/3 of the collective
+            # volume; see EXPERIMENTS §Perf zamba2 iteration)
+            policy = jax.checkpoint_policies.save_only_these_names("block_out")
+        else:
+            # full per-layer remat: the scan saves only layer-boundary
+            # activations; everything inside is recomputed in backward.
+            policy = jax.checkpoint_policies.nothing_saveable
+        body = jax.checkpoint(body, policy=policy)
+
+    xs = (stacked, seg_cache)
+    (x, aux), cache_out = jax.lax.scan(body, (x, aux), xs, length=seg.n_repeat)
+    return x, aux, cache_out
+
+
+# -------------------------------------------------------------------- forward
+def apply_trunk(params: Dict, cfg: ModelConfig, x: jnp.ndarray, positions,
+                mode: str = "forward", cache: Optional[Dict] = None, index=None,
+                s_cache: Optional[int] = None):
+    plan = layer_plan(cfg)
+    aux = jnp.zeros((), jnp.float32)
+    cache_out = []
+    for si, seg in enumerate(plan):
+        seg_cache = None if cache is None else cache["segments"][si]
+        x, aux, c = _apply_segment(seg, params["segments"][si], seg_cache, x,
+                                   aux, cfg, positions, mode, index, s_cache)
+        cache_out.append(c)
+    x = apply_norm(params["final_norm"], x, cfg)
+    new_cache = (None if (cache is None and mode != "prefill")
+                 else {"segments": cache_out})
+    return x, aux, new_cache
+
+
+def embed_inputs(params: Dict, cfg: ModelConfig, inputs: jnp.ndarray,
+                 vision_embeds: Optional[jnp.ndarray] = None,
+                 vision_mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    from repro.dist.sharding import constrain
+    if cfg.embed_inputs:
+        x = embed_tokens(params["embed"], inputs, cfg)
+    else:
+        x = inputs.astype(cfg.cdtype)
+    if vision_embeds is not None:
+        x = jnp.where(vision_mask[..., None], vision_embeds.astype(x.dtype), x)
+    return constrain(x, "B", "S", None)
+
+
+def forward(params: Dict, cfg: ModelConfig, inputs: jnp.ndarray, positions,
+            vision_embeds=None, vision_mask=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full forward: returns (logits (B,S,V) fp32, moe_aux_loss)."""
+    x = embed_inputs(params, cfg, inputs, vision_embeds, vision_mask)
+    x, aux, _ = apply_trunk(params, cfg, x, positions, mode="forward")
+    logits = lm_logits(params, x, cfg, embed_params=params.get("embed"))
+    return logits, aux
+
+
+def loss_fn(params: Dict, cfg: ModelConfig, batch: Dict) -> Tuple[jnp.ndarray, Dict]:
+    """Next-token (or masked-unit, for encoders) cross entropy."""
+    positions = batch.get("positions")
+    if positions is None:
+        B, S = batch["inputs"].shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    logits, aux = forward(params, cfg, batch["inputs"], positions,
+                          batch.get("vision_embeds"), batch.get("vision_mask"))
+    labels = batch["labels"]
+    # mask the sharding-padded vocab entries
+    if cfg.vocab != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.vocab) >= cfg.vocab_size
+        logits = jnp.where(pad_mask[None, None, :], NEG_INF, logits)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    valid = labels >= 0
+    safe = jnp.where(valid, labels, 0)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(valid.sum(), 1)
+    ce = jnp.where(valid, nll, 0.0).sum() / denom
+    loss = ce + aux
+    metrics = {"ce": ce, "aux": aux,
+               "accuracy": (jnp.where(valid, (logits.argmax(-1) == labels), False)
+                            .sum() / denom)}
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------- cache
+def init_cache(cfg: ModelConfig, batch: int, s_cache: int, dtype=None) -> Dict:
+    segs = []
+    for seg in layer_plan(cfg):
+        seg_cache = {}
+        for j, kind in enumerate(seg.pattern):
+            one = init_block_cache(kind, cfg, batch, s_cache, dtype)
+            seg_cache[f"b{j}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (seg.n_repeat,) + a.shape), one)
+        segs.append(seg_cache)
+    return {"segments": segs}
+
+
+def prefill(params: Dict, cfg: ModelConfig, inputs: jnp.ndarray, positions,
+            s_cache: Optional[int] = None, vision_embeds=None, vision_mask=None):
+    """Process a prompt, producing the decode cache (sized ``s_cache``,
+    default = prompt length). Returns (last-token logits, cache)."""
+    s_cache = s_cache or inputs.shape[1]
+    x = embed_inputs(params, cfg, inputs, vision_embeds, vision_mask)
+    x, _, cache = apply_trunk(params, cfg, x, positions, mode="prefill",
+                              s_cache=s_cache)
+    last = x[:, -1:, :]
+    logits = lm_logits(params, last, cfg, embed_params=params.get("embed"))
+    return logits[:, 0], cache
+
+
+def decode_step(params: Dict, cfg: ModelConfig, token: jnp.ndarray, positions,
+                cache: Dict, index) -> Tuple[jnp.ndarray, Dict]:
+    """One decode step. token: (B, 1) int32 (or (B,1,d) embeds); index: scalar."""
+    x = embed_inputs(params, cfg, token)
+    x, _, cache = apply_trunk(params, cfg, x, positions, mode="decode",
+                              cache=cache, index=index)
+    logits = lm_logits(params, x, cfg, embed_params=params.get("embed"))
+    return logits[:, 0], cache

@@ -1,0 +1,1 @@
+from . import analysis, hw  # noqa: F401

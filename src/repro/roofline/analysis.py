@@ -1,0 +1,447 @@
+"""Roofline-term extraction from compiled (SPMD-partitioned) HLO text.
+
+XLA's ``compiled.cost_analysis()`` visits each computation ONCE — a
+``lax.scan`` over 60 layers reports one layer's FLOPs (verified in this
+container; see tests/test_roofline.py). Since the whole framework leans on
+scan-over-layers, we parse the optimized HLO text ourselves and multiply
+``while`` bodies by their trip counts (recursively — microbatch scans
+contain layer scans contain attention-chunk scans).
+
+Accounting model (all per-device, matching the partitioned module):
+
+* flops     — 2 * prod(output_dims) * prod(contracting_dims) per ``dot``,
+              recursing into fusions/calls/whiles (x trip count).
+* hbm bytes — per computation, the sum of operand + output buffer sizes of
+              *top-level* instructions; fusion bodies are NOT recursed into
+              (a fused kernel touches HBM only at its boundary), which makes
+              this a faithful model of HBM traffic rather than a naive
+              "every op" overcount. Parameter/constant/tuple plumbing is
+              skipped.
+* collective bytes — operand sizes of all-gather / all-reduce /
+              reduce-scatter / all-to-all / collective-permute / %psum etc.,
+              again x trip counts.
+
+Roofline terms (seconds): flops / PEAK, hbm_bytes / HBM_BW,
+coll_bytes / ICI_BW — per chip, which is identical to the global form
+(global_quantity / (chips x per_chip_rate)) for SPMD programs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+from . import hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "collective-broadcast", "ragged-all-to-all")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    b = _DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * b
+
+
+def _all_shapes_bytes(text: str) -> int:
+    return sum(_shape_bytes(m.group(1), m.group(2)) for m in _SHAPE_RE.finditer(text))
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    opcode: str
+    out_bytes: int
+    out_dims: Tuple[int, ...]          # first shape's dims (for dot math)
+    operand_names: List[str]
+    raw: str
+    called: List[str]                  # computations referenced
+    operand_bytes: int = 0             # resolved via symbol table
+    flops: float = 0.0
+    is_while: bool = False
+    cond: str = ""
+    body: str = ""
+    is_fusion: bool = False
+    is_collective: bool = False
+    collective_kind: str = ""
+    accountable: bool = True
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instructions: List[Instruction]
+    symbols: Dict[str, Tuple[int, Tuple[int, ...]]]  # name -> (bytes, dims)
+
+
+_ASSIGN_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(r"([\w\-]+)\(")
+_OPERAND_NAME_RE = re.compile(r"%([\w.\-]+)")
+_CALLED_RE = re.compile(r"(?:to_apply|calls|condition|body)=\{?%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_DOT_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+# ops that move no HBM bytes of their own (copies and iota DO count)
+_PLUMBING = ("parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "after-all", "partition-id", "replica-id")
+
+
+def _first_dims(text: str) -> Tuple[int, ...]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return ()
+    return tuple(int(d) for d in m.group(2).split(",") if d)
+
+
+def _split_type_rest(rhs: str) -> Tuple[str, str]:
+    """Split '<type> opcode(...)...' into (type_str, rest)."""
+    rhs = rhs.lstrip()
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return rhs[:i + 1], rhs[i + 1:].lstrip()
+        return rhs, ""
+    sp = rhs.find(" ")
+    if sp < 0:
+        return rhs, ""
+    return rhs[:sp], rhs[sp + 1:].lstrip()
+
+
+def _parse_instruction(line: str) -> Optional[Instruction]:
+    m = _ASSIGN_RE.match(line)
+    if not m:
+        return None
+    name, rhs = m.groups()
+    out_ty, rest = _split_type_rest(rhs)
+    om = _OPCODE_RE.match(rest)
+    if not om:
+        return None
+    opcode = om.group(1)
+    out_bytes = _all_shapes_bytes(out_ty)
+    # operand section: balanced parens after the opcode
+    op_start = len(opcode) + 1
+    depth, i = 1, op_start
+    while i < len(rest) and depth:
+        if rest[i] == "(":
+            depth += 1
+        elif rest[i] == ")":
+            depth -= 1
+        i += 1
+    operands = rest[op_start:i - 1]
+    tail = rest[i:]
+    operand_names = _OPERAND_NAME_RE.findall(operands)
+
+    called = _CALLED_RE.findall(tail)
+    br = _BRANCHES_RE.search(tail)
+    if br:
+        called += [c.strip().lstrip("%") for c in br.group(1).split(",") if c.strip()]
+
+    inst = Instruction(
+        name=name, opcode=opcode, out_bytes=out_bytes,
+        out_dims=_first_dims(out_ty), operand_names=operand_names,
+        raw=line, called=called,
+        accountable=opcode not in _PLUMBING)
+    if opcode == "dot":
+        cm = _DOT_CONTRACT_RE.search(tail)
+        inst.raw_contract = cm.group(1) if cm else ""
+    if opcode == "while":
+        inst.is_while = True
+        cm = re.search(r"condition=%?([\w.\-]+)", tail)
+        bm = re.search(r"body=%?([\w.\-]+)", tail)
+        inst.cond = cm.group(1) if cm else ""
+        inst.body = bm.group(1) if bm else ""
+    if opcode == "fusion":
+        inst.is_fusion = True
+    for c in _COLLECTIVES:
+        if opcode.startswith(c):
+            inst.is_collective = True
+            inst.collective_kind = c
+            break
+    return inst
+
+
+_HEADER_PARAM_RE = re.compile(r"([\w.\-]+)\s*:\s*((?:\([^)]*\))|(?:\S+?))(?:[,)]|$)")
+
+
+def _resolve_computation(comp: Computation) -> None:
+    """Fill operand_bytes / dot flops from the computation's symbol table."""
+    table = comp.symbols
+    for inst in comp.instructions:
+        table[inst.name] = (inst.out_bytes, inst.out_dims)
+    for inst in comp.instructions:
+        inst.operand_bytes = sum(table.get(n, (0, ()))[0]
+                                 for n in inst.operand_names)
+        if inst.opcode == "dot":
+            contract = 1
+            dims = table.get(inst.operand_names[0], (0, ()))[1] \
+                if inst.operand_names else ()
+            spec = getattr(inst, "raw_contract", "")
+            for ax in spec.split(","):
+                if ax and dims and int(ax) < len(dims):
+                    contract *= dims[int(ax)]
+            out_elems = 1
+            for d in inst.out_dims:
+                out_elems *= d
+            inst.flops = 2.0 * out_elems * contract
+
+
+_COMP_NAME_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-$]+)\s*\(")
+_TRIP_COUNT_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _is_comp_header(stripped: str) -> bool:
+    # computation headers end with '{' and have no ' = ' assignment before it
+    return (stripped.endswith("{")
+            and " = " not in stripped.split("{")[0]
+            and not stripped.startswith("HloModule"))
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    entry = ""
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.rstrip()
+        if cur is None and _is_comp_header(stripped):
+            nm = _COMP_NAME_RE.match(stripped)
+            if nm:
+                cur = Computation(name=nm.group(1), instructions=[], symbols={})
+                comps[cur.name] = cur
+                # header params carry types: seed the symbol table
+                body = stripped[stripped.find("("):]
+                for pm in _HEADER_PARAM_RE.finditer(body):
+                    cur.symbols[pm.group(1)] = (
+                        _all_shapes_bytes(pm.group(2)), _first_dims(pm.group(2)))
+                if stripped.lstrip().startswith("ENTRY"):
+                    entry = cur.name
+            continue
+        if stripped.strip() == "}":
+            cur = None
+            continue
+        if cur is not None:
+            inst = _parse_instruction(stripped)
+            if inst:
+                cur.instructions.append(inst)
+    for comp in comps.values():
+        _resolve_computation(comp)
+    if not entry and comps:
+        entry = next(iter(comps))
+    return comps, entry
+
+
+def _trip_count(comps: Dict[str, Computation], inst: "Instruction",
+                default: int = 1) -> int:
+    """Prefer XLA's backend_config known_trip_count on the while op;
+    fall back to the largest integer constant in the condition computation."""
+    m = _TRIP_COUNT_RE.search(inst.raw)
+    if m:
+        return int(m.group(1))
+    comp = comps.get(inst.cond)
+    if comp is None:
+        return default
+    consts: List[int] = []
+    for i in comp.instructions:
+        consts += [int(x) for x in _CONST_RE.findall(i.raw)]
+    return max(consts) if consts else default
+
+
+# named-scope markers emitted by the model code around regions that the
+# Pallas kernels fuse on TPU (jax.named_scope -> HLO metadata op_name).
+# Instructions inside these scopes are VMEM-resident in the kernel
+# lowering; the analyzer tracks their HBM bytes separately so the roofline
+# can report memory terms both as-lowered (pure XLA) and kernel-fused.
+KERNEL_SCOPES = ("pallas_flash_attention", "pallas_ssd")
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    kernel_fusable_bytes: float = 0.0     # interior bytes of kernel scopes
+    collective_bytes: float = 0.0
+    collective_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    collective_count: Dict[str, int] = dataclasses.field(default_factory=dict)
+    while_trip_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    collective_by_dtype: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    hbm_by_opcode: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add_collective(self, kind: str, nbytes: float, count: float,
+                       dtype: str = "?"):
+        self.collective_bytes += nbytes
+        self.collective_by_kind[kind] = self.collective_by_kind.get(kind, 0.0) + nbytes
+        self.collective_count[kind] = self.collective_count.get(kind, 0) + int(count)
+        self.collective_by_dtype[dtype] = (
+            self.collective_by_dtype.get(dtype, 0.0) + nbytes)
+
+
+def _analyze_comp(comps: Dict[str, Computation], name: str, mult: float,
+                  stats: HloStats, count_bytes: bool, _seen=None) -> None:
+    comp = comps.get(name)
+    if comp is None:
+        return
+    for inst in comp.instructions:
+        stats.flops += inst.flops * mult
+        if count_bytes and inst.accountable:
+            nbytes = (inst.out_bytes + inst.operand_bytes) * mult
+            stats.hbm_bytes += nbytes
+            stats.hbm_by_opcode[inst.opcode] = (
+                stats.hbm_by_opcode.get(inst.opcode, 0.0) + nbytes)
+            if any(scope in inst.raw for scope in KERNEL_SCOPES):
+                stats.kernel_fusable_bytes += nbytes
+        if inst.is_collective:
+            dm = _SHAPE_RE.search(inst.raw)
+            stats.add_collective(inst.collective_kind,
+                                 inst.operand_bytes * mult, mult,
+                                 dtype=dm.group(1) if dm else "?")
+        if inst.is_while:
+            tc = _trip_count(comps, inst)
+            stats.while_trip_counts[inst.body] = tc
+            _analyze_comp(comps, inst.body, mult * tc, stats, count_bytes)
+        elif inst.is_fusion:
+            # flops inside fusions still count; bytes only at the boundary
+            for c in inst.called:
+                _analyze_comp(comps, c, mult, stats, count_bytes=False)
+        elif inst.called and inst.opcode in ("call", "conditional", "async-start"):
+            for c in inst.called:
+                _analyze_comp(comps, c, mult, stats, count_bytes=count_bytes)
+
+
+def analyze_hlo_text(text: str) -> HloStats:
+    comps, entry = parse_hlo(text)
+    stats = HloStats()
+    _analyze_comp(comps, entry, 1.0, stats, count_bytes=True)
+    return stats
+
+
+# ---------------------------------------------------------------- roofline
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    collective_by_kind: Dict[str, float]
+    collective_count: Dict[str, int]
+    kernel_fusable_bytes: float = 0.0
+    collective_by_dtype: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+
+    @property
+    def memory_s_fused(self) -> float:
+        """Memory term with the Pallas-kernel regions VMEM-resident (the
+        TPU deployment configuration; see KERNEL_SCOPES)."""
+        return max(self.hbm_bytes - self.kernel_fusable_bytes, 0.0) / hw.HBM_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def to_dict(self) -> Dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "memory_s_fused": self.memory_s_fused,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "flops_per_device": self.flops, "hbm_bytes_per_device": self.hbm_bytes,
+            "kernel_fusable_bytes_per_device": self.kernel_fusable_bytes,
+            "collective_bytes_per_device": self.collective_bytes,
+            "collective_by_kind": self.collective_by_kind,
+            "collective_count": self.collective_count,
+            "collective_by_dtype": self.collective_by_dtype,
+        }
+
+
+def roofline_from_text(text: str) -> Roofline:
+    s = analyze_hlo_text(text)
+    return Roofline(
+        compute_s=s.flops / hw.PEAK_FLOPS_BF16,
+        memory_s=s.hbm_bytes / hw.HBM_BW,
+        collective_s=s.collective_bytes / hw.ICI_BW,
+        flops=s.flops, hbm_bytes=s.hbm_bytes,
+        collective_bytes=s.collective_bytes,
+        collective_by_kind=s.collective_by_kind,
+        collective_count=s.collective_count,
+        kernel_fusable_bytes=s.kernel_fusable_bytes,
+        collective_by_dtype=s.collective_by_dtype,
+    )
+
+
+# ------------------------------------------------------- model flops (6ND)
+def model_flops(cfg, n_tokens: int, kind: str = "train") -> float:
+    """MODEL_FLOPS = 6*N*D for training, 2*N*D for inference forward
+    (N = active params excluding embeddings/vocab head for MoE accounting)."""
+    n_active = active_param_count(cfg)
+    per_tok = 6.0 * n_active if kind == "train" else 2.0 * n_active
+    return per_tok * n_tokens
+
+
+def active_param_count(cfg) -> float:
+    """Active (per-token) parameter count, analytic."""
+    d, L = cfg.d_model, cfg.n_layers
+    n = 0.0
+    # embeddings participate as lookup, count vocab head as matmul params
+    n += cfg.vocab * d  # lm head (tied or not, the matmul happens)
+    for seg in _plan(cfg):
+        for kind in seg.pattern:
+            n += seg.n_repeat * _block_active_params(cfg, kind)
+    return n
+
+
+def _plan(cfg):
+    from repro.models.common import layer_plan
+    return layer_plan(cfg)
+
+
+def _block_active_params(cfg, kind: str) -> float:
+    d = cfg.d_model
+    if kind == "mamba":
+        din, ng, st, nh = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+        return d * (2 * din + 2 * ng * st + nh) + din * d
+    n = 0.0
+    if cfg.use_mla and kind in ("dense", "moe"):
+        qk = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+        n += d * cfg.q_lora_rank + cfg.q_lora_rank * cfg.nq * qk
+        n += d * (cfg.kv_lora_rank + cfg.qk_rope_head_dim)
+        n += cfg.kv_lora_rank * cfg.nq * (cfg.qk_nope_head_dim + cfg.v_head_dim)
+        n += cfg.nq * cfg.v_head_dim * d
+    else:
+        hd = cfg.hd
+        n += d * hd * (cfg.nq + 2 * cfg.nkv) + cfg.nq * hd * d
+    if kind == "moe":
+        ff = cfg.expert_d_ff
+        n += cfg.top_k * 3 * d * ff                                  # routed
+        n += cfg.n_shared_experts * 3 * d * (cfg.shared_d_ff or ff)  # shared
+        n += d * cfg.n_experts                                       # router
+    else:
+        mult = 3 if cfg.gated_mlp else 2
+        ff = cfg.d_ff if not (cfg.n_experts and cfg.first_k_dense and kind == "dense") \
+            else (cfg.d_ff or cfg.shared_d_ff)
+        n += mult * d * ff
+    return n

@@ -1,0 +1,8 @@
+"""Target-hardware constants: TPU v5e (the assignment's roofline basis)."""
+
+PEAK_FLOPS_BF16 = 197e12       # per chip, bf16
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW = 50e9                  # bytes/s per link (~50 GB/s/link)
+HBM_BYTES = 16 * 2**30         # 16 GiB per chip
+VMEM_BYTES = 128 * 2**20       # ~128 MiB vector memory per core (v5e ~ 48-128)
+MXU_TILE = 128                 # systolic array alignment

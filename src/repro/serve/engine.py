@@ -1,0 +1,148 @@
+"""Batched serving engine: slot-based continuous batching.
+
+Requests occupy slots of a fixed decode batch; finished slots are refilled
+from the queue. Each slot advances at its OWN cache index (per-slot
+positions), implemented by vmapping the single-sequence decode step over
+the batch dimension of the shared KV cache — slot writes become batched
+scatters, so heterogeneous progress coexists in one cache allocation.
+
+This is the long-running inference service Mirage keeps alive across
+chained sub-jobs; engine state (cache + slot table) checkpoints through
+the same substrate as training.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int = 16
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, batch: int = 4,
+                 s_max: int = 256, eos_id: Optional[int] = None):
+        assert cfg.supports_decode, f"{cfg.arch_id} is encoder-only"
+        self.cfg, self.params = cfg, params
+        self.batch, self.s_max = batch, s_max
+        self.eos_id = eos_id
+        self.cache = transformer.init_cache(cfg, batch, s_max)
+        self.lengths = np.zeros(batch, np.int64)
+        self.slot_req: List[Optional[Request]] = [None] * batch
+        self.queue: List[Request] = []
+        self._decode = jax.jit(self._make_decode())
+
+    def _make_decode(self):
+        cfg = self.cfg
+
+        def one(params, tok, cache_row, idx):
+            """Single-sequence decode: tok scalar, cache_row has no batch dim."""
+            cache = jax.tree.map(lambda c: c[:, None] if c.ndim >= 1 else c,
+                                 cache_row)
+            # re-wrap: leaves were (L, ...) after vmap slicing -> (L, 1, ...)
+            pos = jnp.full((1, 1), idx, jnp.int32)
+            if cfg.mrope_sections:
+                pos = jnp.broadcast_to(pos[None], (3, 1, 1))
+            logits, cache = transformer.decode_step(
+                params, cfg, tok.reshape(1, 1), pos, cache, idx)
+            cache_row = jax.tree.map(lambda c: c[:, 0], cache)
+            return logits[0], cache_row
+
+        vm = jax.vmap(one,
+                      in_axes=(None, 0, jax.tree.map(lambda _: 1, self.cache), 0),
+                      out_axes=(0, jax.tree.map(lambda _: 1, self.cache)))
+
+        def step(params, toks, cache, idxs):
+            return vm(params, toks, cache, idxs)
+
+        return step
+
+    # ----------------------------------------------------------- requests
+    def add_request(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> List[int]:
+        admitted = []
+        for slot in range(self.batch):
+            if self.slot_req[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slot_req[slot] = req
+                self.lengths[slot] = 0
+                self._prefill_slot(slot, req)
+                admitted.append(slot)
+        return admitted
+
+    def _prefill_slot(self, slot: int, req: Request) -> None:
+        """Feed the prompt through per-slot decode steps. Only this slot's
+        cache rows are merged back, so concurrent slots are untouched."""
+        for i, t in enumerate(req.prompt[:-1]):
+            toks = np.zeros(self.batch, np.int32)
+            toks[slot] = t
+            idxs = np.zeros(self.batch, np.int32)
+            idxs[slot] = i
+            _, cache = self._decode(self.params, jnp.asarray(toks),
+                                    self.cache, jnp.asarray(idxs))
+            self.cache = _merge_slot(self.cache, cache, slot)
+        self.lengths[slot] = max(len(req.prompt) - 1, 0)
+
+    # --------------------------------------------------------------- step
+    def step(self) -> int:
+        """One tick: admit waiting requests, decode one token per live slot."""
+        self._admit()
+        live = [s for s in range(self.batch) if self.slot_req[s] is not None]
+        if not live:
+            return 0
+        toks = np.zeros(self.batch, np.int32)
+        idxs = np.zeros(self.batch, np.int32)
+        for s in live:
+            req = self.slot_req[s]
+            toks[s] = req.out[-1] if req.out else req.prompt[-1]
+            idxs[s] = self.lengths[s]
+        logits, cache = self._decode(self.params, jnp.asarray(toks),
+                                     self.cache, jnp.asarray(idxs))
+        self.cache = _merge_slots(self.cache, cache, live)
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        for s in live:
+            req = self.slot_req[s]
+            tok = int(nxt[s])
+            req.out.append(tok)
+            self.lengths[s] += 1
+            if (len(req.out) >= req.max_new
+                    or (self.eos_id is not None and tok == self.eos_id)
+                    or self.lengths[s] >= self.s_max - 1):
+                req.done = True
+                self.slot_req[s] = None
+                self.lengths[s] = 0
+        return len(live)
+
+    def run(self, max_ticks: int = 10_000) -> List[Request]:
+        known: List[Request] = list(self.queue)
+        for _ in range(max_ticks):
+            if not self.queue and all(r is None for r in self.slot_req):
+                break
+            self.step()
+        return [r for r in known if r.done]
+
+
+def _merge_slot(cache_dst, cache_src, slot: int):
+    return jax.tree.map(lambda d, s: d.at[:, slot].set(s[:, slot]),
+                        cache_dst, cache_src)
+
+
+def _merge_slots(cache_dst, cache_src, slots: List[int]):
+    idx = jnp.asarray(slots)
+    return jax.tree.map(lambda d, s: d.at[:, idx].set(s[:, idx]),
+                        cache_dst, cache_src)

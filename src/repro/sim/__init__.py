@@ -1,0 +1,5 @@
+from .cluster import Cluster  # noqa: F401
+from .simulator import SlurmSimulator, replay  # noqa: F401
+from .trace import (PROFILES, ClusterProfile, Job, clean_trace,  # noqa: F401
+                    split_trace, synthesize_trace, trace_stats)
+from .workload import SubJobChain, pair_outcome, run_pair  # noqa: F401

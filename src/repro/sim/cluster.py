@@ -1,0 +1,44 @@
+"""Cluster abstraction: homogeneous node pool with counting allocation.
+
+The paper's clusters are homogeneous GPU nodes (4xV100 / 4xRTX / 3xA100);
+jobs request whole nodes, so allocation is a counting problem. Node
+identity is tracked only to support downtime windows (maintenance) and
+per-node accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Set, Tuple
+
+
+@dataclasses.dataclass
+class Cluster:
+    n_nodes: int
+    down_nodes: int = 0
+    _allocated: Dict[int, int] = dataclasses.field(default_factory=dict)
+
+    @property
+    def n_available(self) -> int:
+        return self.n_nodes - self.down_nodes
+
+    @property
+    def n_busy(self) -> int:
+        return sum(self._allocated.values())
+
+    @property
+    def n_free(self) -> int:
+        return self.n_available - self.n_busy
+
+    def can_fit(self, n: int) -> bool:
+        return n <= self.n_free
+
+    def allocate(self, job_id: int, n: int) -> None:
+        if n > self.n_free:
+            raise RuntimeError(f"allocation overflow: want {n}, free {self.n_free}")
+        self._allocated[job_id] = n
+
+    def release(self, job_id: int) -> int:
+        return self._allocated.pop(job_id, 0)
+
+    def utilization(self) -> float:
+        return self.n_busy / max(self.n_available, 1)

@@ -1,0 +1,7 @@
+from .chain import ChainConfig, ChainedTrainer  # noqa: F401
+from .checkpoint import (AsyncCheckpointer, latest_step,  # noqa: F401
+                         restore_checkpoint, save_checkpoint)
+from .fault import ElasticPlan, PreemptionGuard, StragglerMonitor  # noqa: F401
+from .grad_compression import make_error_feedback_transform  # noqa: F401
+from .optimizer import OptimizerConfig, adamw_update, init_opt_state  # noqa: F401
+from .step import make_prefill_step, make_serve_step, make_train_step  # noqa: F401

@@ -1,0 +1,158 @@
+"""Checkpointing: zstd-compressed msgpack shards with integrity manifests,
+async writes, and mesh-reshape restore (elastic scaling).
+
+This is the substrate Mirage's chained sub-jobs stand on: a sub-job
+checkpoints at (or before) its wall-clock limit and the successor resumes
+— possibly on a different mesh shape after node failures (restore places
+each logical array into whatever sharding the new mesh dictates).
+
+Format: one directory per step:
+  step_000123/
+    manifest.json   — tree structure, shapes, dtypes, blake2 digests, step
+    data.msgpack.zst — flattened leaves (row-major bytes)
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import pathlib
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard as zstd
+
+
+def _tree_paths(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(p.key) if hasattr(p, "key") else str(p.idx)
+                       for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def save_checkpoint(directory: str, step: int, state: Dict,
+                    keep_last: int = 3) -> pathlib.Path:
+    """Synchronous save. state: arbitrary pytree of arrays (+ scalars)."""
+    base = pathlib.Path(directory)
+    tmp = base / f"step_{step:09d}.tmp"
+    final = base / f"step_{step:09d}"
+    tmp.mkdir(parents=True, exist_ok=True)
+    leaves = _tree_paths(state)
+    manifest = {"step": step, "leaves": [], "time": time.time(),
+                "treedef": None}
+    payload = {}
+    for key, leaf in leaves:
+        arr = np.asarray(jax.device_get(leaf))
+        buf = arr.tobytes()
+        manifest["leaves"].append({
+            "key": key, "shape": list(arr.shape), "dtype": str(arr.dtype),
+            "digest": hashlib.blake2b(buf, digest_size=16).hexdigest(),
+        })
+        payload[key] = buf
+    raw = msgpack.packb(payload, use_bin_type=True)
+    (tmp / "data.msgpack.zst").write_bytes(zstd.ZstdCompressor(level=3).compress(raw))
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        import shutil
+        shutil.rmtree(final)
+    tmp.rename(final)                       # atomic publish
+    _gc(base, keep_last)
+    return final
+
+
+def _gc(base: pathlib.Path, keep_last: int) -> None:
+    steps = sorted(p for p in base.glob("step_*") if p.is_dir()
+                   and not p.name.endswith(".tmp"))
+    for p in steps[:-keep_last]:
+        import shutil
+        shutil.rmtree(p, ignore_errors=True)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    base = pathlib.Path(directory)
+    if not base.exists():
+        return None
+    steps = sorted(int(p.name.split("_")[1]) for p in base.glob("step_*")
+                   if p.is_dir() and not p.name.endswith(".tmp"))
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(directory: str, template, step: Optional[int] = None,
+                       shardings=None, verify: bool = True):
+    """Restore into the structure of ``template`` (a pytree of arrays or
+    ShapeDtypeStructs). With ``shardings`` (same-structure NamedShardings),
+    leaves are placed directly into the target sharding — this is the
+    elastic-restart path: the checkpoint has no mesh baked in, so any new
+    mesh shape works."""
+    base = pathlib.Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    d = base / f"step_{step:09d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    raw = zstd.ZstdDecompressor().decompress((d / "data.msgpack.zst").read_bytes())
+    payload = msgpack.unpackb(raw, raw=False)
+    meta = {m["key"]: m for m in manifest["leaves"]}
+
+    leaves = _tree_paths(template)
+    sh_leaves = _tree_paths(shardings) if shardings is not None else None
+    out = []
+    for i, (key, leaf) in enumerate(leaves):
+        m = meta.get(key)
+        if m is None:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        buf = payload[key]
+        if verify:
+            dig = hashlib.blake2b(buf, digest_size=16).hexdigest()
+            if dig != m["digest"]:
+                raise IOError(f"digest mismatch for {key!r} (corrupt shard)")
+        arr = np.frombuffer(buf, dtype=m["dtype"]).reshape(m["shape"])
+        if sh_leaves is not None:
+            arr = jax.device_put(arr, sh_leaves[i][1])
+        else:
+            arr = jnp.asarray(arr)
+        out.append(arr)
+    treedef = jax.tree_util.tree_structure(template)
+    return jax.tree_util.tree_unflatten(treedef, out), manifest["step"]
+
+
+class AsyncCheckpointer:
+    """Background-thread checkpoint writer: the train loop hands off a
+    host-fetched snapshot and keeps stepping (standard async-ckpt overlap)."""
+
+    def __init__(self, directory: str, keep_last: int = 3):
+        self.directory = directory
+        self.keep_last = keep_last
+        self._thread: Optional[threading.Thread] = None
+        self._last_error: Optional[BaseException] = None
+
+    def save(self, step: int, state) -> None:
+        self.wait()
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, host_state,
+                                self.keep_last)
+            except BaseException as e:   # surfaced on next wait()
+                self._last_error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._last_error is not None:
+            err, self._last_error = self._last_error, None
+            raise err

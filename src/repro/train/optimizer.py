@@ -1,0 +1,91 @@
+"""AdamW + schedules, pure JAX (no optax in the container).
+
+Optimizer state mirrors the parameter pytree (so parameter PartitionSpecs
+apply verbatim — ZeRO-style sharding falls out of the 2D param sharding).
+``state_dtype`` lets very large archs (deepseek-v2-236b) keep m/v in
+bfloat16 — a documented memory/accuracy trade recorded in DESIGN §6.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    state_dtype: Optional[str] = None   # None -> match param dtype
+
+
+def lr_schedule(ocfg: OptimizerConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(ocfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - ocfg.warmup_steps)
+                    / jnp.maximum(ocfg.total_steps - ocfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    scale = ocfg.min_lr_ratio + (1.0 - ocfg.min_lr_ratio) * cos
+    return ocfg.lr * warm * scale
+
+
+def init_opt_state(params, ocfg: OptimizerConfig) -> Dict[str, Any]:
+    def zeros_like(p):
+        dt = jnp.dtype(ocfg.state_dtype) if ocfg.state_dtype else p.dtype
+        return jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree.map(zeros_like, params),
+        "v": jax.tree.map(zeros_like, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(grads, params, opt_state, ocfg: OptimizerConfig
+                 ) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    step = opt_state["step"] + 1
+    lr = lr_schedule(ocfg, step)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, ocfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if ocfg.grad_clip else jnp.asarray(1.0)
+
+    b1, b2 = ocfg.beta1, ocfg.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+        m_new = b1 * m32 + (1 - b1) * g
+        v_new = b2 * v32 + (1 - b2) * jnp.square(g)
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + ocfg.eps)
+        if p.ndim >= 2 and ocfg.weight_decay:   # decay matrices only
+            delta = delta + ocfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    out = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"])
+    # unzip the (p, m, v) tuples
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_params, new_state, metrics

@@ -1,0 +1,95 @@
+"""Train/prefill/serve step factories.
+
+``make_train_step`` builds the jittable update: microbatched gradient
+accumulation (lax.scan over microbatches — the standard memory lever for
+the big archs at train_4k), fp32 accumulation, AdamW update, optional
+gradient compression hook for the cross-pod data-parallel reduction.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.common import ModelConfig
+from .optimizer import OptimizerConfig, adamw_update
+
+
+def _split_microbatches(batch: Dict, n: int) -> Dict:
+    def rs(x):
+        B = x.shape[0] if x.ndim >= 1 else 1
+        if x.ndim >= 1 and x.shape[0] % n == 0:
+            return x.reshape((n, x.shape[0] // n) + x.shape[1:])
+        # positions in M-RoPE form are (3, B, S): split on axis 1
+        if x.ndim >= 2 and x.shape[1] % n == 0:
+            return jnp.moveaxis(
+                x.reshape((x.shape[0], n, x.shape[1] // n) + x.shape[2:]), 1, 0)
+        raise ValueError(f"cannot microbatch shape {x.shape} by {n}")
+    return jax.tree.map(rs, batch)
+
+
+def make_train_step(cfg: ModelConfig, ocfg: OptimizerConfig,
+                    num_microbatches: int = 1,
+                    grad_transform: Optional[Callable] = None,
+                    grad_accum_dtype: Optional[str] = None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    grad_accum_dtype="bfloat16"/"bf16" accumulates microbatch gradients in
+    bf16 (halves the accumulator and lets SPMD reduce in bf16) — a
+    memory/precision trade used by the largest archs (EXPERIMENTS §Perf).
+    """
+    acc_dtype = {"bf16": jnp.bfloat16, "bfloat16": jnp.bfloat16}.get(
+        grad_accum_dtype or "", jnp.float32)
+
+    def loss_for(params, mb):
+        return transformer.loss_fn(params, cfg, mb)
+
+    grad_fn = jax.value_and_grad(loss_for, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if num_microbatches > 1:
+            mbs = _split_microbatches(batch, num_microbatches)
+
+            def body(acc, mb):
+                (loss, metrics), grads = grad_fn(params, mb)
+                grads = jax.tree.map(lambda a, g: a + g.astype(acc_dtype),
+                                     acc[0], grads)
+                return (grads, acc[1] + loss, acc[2] + metrics["ce"]), None
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dtype), params)
+            (grads, loss_sum, ce_sum), _ = jax.lax.scan(
+                body, (zero, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+                mbs)
+            grads = jax.tree.map(lambda g: g / num_microbatches, grads)
+            loss = loss_sum / num_microbatches
+            metrics = {"ce": ce_sum / num_microbatches}
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        params, opt_state, opt_metrics = adamw_update(grads, params, opt_state, ocfg)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, s_cache: Optional[int] = None):
+    def prefill_step(params, inputs, positions):
+        return transformer.prefill(params, cfg, inputs, positions, s_cache)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, sample: str = "greedy"):
+    """One new token against the KV cache; greedy argmax by default."""
+    def serve_step(params, token, positions, cache, index):
+        logits, cache = transformer.decode_step(params, cfg, token, positions,
+                                                cache, index)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_token, logits, cache
+    return serve_step

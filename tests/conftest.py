@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests run against the real single CPU device (the 512-device flag is
+# exclusive to repro.launch.dryrun, per the dry-run contract)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

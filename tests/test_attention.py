@@ -1,0 +1,133 @@
+"""Attention implementations: equivalence, gradients, caches, MLA."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as A
+from repro.models import registry
+
+
+def _qkv(B=2, S=48, Hq=4, Hkv=2, D=16, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D))
+    k = jax.random.normal(ks[1], (B, S, Hkv, D))
+    v = jax.random.normal(ks[2], (B, S, Hkv, D))
+    pos = jnp.arange(S)[None].repeat(B, 0)
+    return q, k, v, pos
+
+
+@pytest.mark.parametrize("causal,window,softcap", [
+    (True, 0, 0.0), (True, 16, 0.0), (False, 0, 0.0), (True, 0, 25.0)])
+def test_chunked_matches_reference(causal, window, softcap):
+    q, k, v, pos = _qkv()
+    ref = A.attention_reference(q, k, v, pos, pos, causal=causal,
+                                window=window, softcap=softcap)
+    chk = A.attention_chunked(q, k, v, pos, pos, causal=causal, window=window,
+                              softcap=softcap, chunk=16)
+    np.testing.assert_allclose(np.asarray(chk), np.asarray(ref), atol=2e-5)
+
+
+def test_chunked_gradients_match_reference():
+    q, k, v, pos = _qkv()
+    w = jnp.cos(jnp.arange(16))
+    f_ref = lambda *a: (A.attention_reference(*a, pos, pos, causal=True) * w).sum()
+    f_chk = lambda *a: (A.attention_chunked(*a, pos, pos, causal=True,
+                                            chunk=16) * w).sum()
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    gc = jax.grad(f_chk, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gr, gc):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-5)
+
+
+def test_flash_impl_dispatches_and_matches():
+    cfg = registry.get_config("tinyllama-1.1b", smoke=True).replace(
+        attn_impl="flash")
+    q, k, v, pos = _qkv(D=16)
+    out = A.attention_core(q, k, v, pos, pos, cfg, causal=True)
+    ref = A.attention_reference(q, k, v, pos, pos, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_decode_ring_buffer_wraparound():
+    """Sliding-window decode past the window size stays consistent."""
+    from repro.models.common import ModelConfig
+    cfg = ModelConfig(n_layers=1, d_model=32, n_heads=2, n_kv_heads=2,
+                      head_dim=16, d_ff=64, vocab_size=64, sliding_window=8,
+                      compute_dtype="float32")
+    params = A.init_attention(jax.random.PRNGKey(0), cfg)
+    B, S = 1, 24
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, 32)) * 0.5
+    pos = jnp.arange(S)[None]
+    full = A.attn_forward(params, x, cfg, pos, window=8)
+    cache = A.init_kv_cache(cfg, B, S, window=8)
+    P = 13   # prefill length NOT a multiple of the window
+    _, cache = A.attn_prefill(params, x[:, :P], cfg, pos[:, :P], cache,
+                              window=8)
+    for i in range(P, S):
+        y, cache = A.attn_decode(params, x[:, i:i + 1], cfg, pos[:, i:i + 1],
+                                 cache, jnp.asarray(i), window=8)
+        np.testing.assert_allclose(np.asarray(y[:, 0]),
+                                   np.asarray(full[:, i]), atol=1e-4)
+
+
+def test_mla_absorbed_decode_matches_expanded():
+    cfg = registry.get_config("deepseek-v2-236b", smoke=True)
+    params = A.init_mla(jax.random.PRNGKey(0), cfg)
+    B, S = 1, 12
+    x = jax.random.normal(jax.random.PRNGKey(2), (B, S, cfg.d_model)) * 0.3
+    pos = jnp.arange(S)[None]
+    full = A.mla_forward(params, x, cfg, pos)
+    cache = A.init_mla_cache(cfg, B, S)
+    _, cache = A.mla_prefill(params, x[:, :8], cfg, pos[:, :8], cache)
+    for i in range(8, S):
+        y, cache = A.mla_decode(params, x[:, i:i + 1], cfg, pos[:, i:i + 1],
+                                cache, i)
+        np.testing.assert_allclose(np.asarray(y[:, 0]), np.asarray(full[:, i]),
+                                   atol=1e-4)
+
+
+def test_mrope_collapses_to_rope_for_text():
+    """Qwen2-VL property: identical (t,h,w) positions == standard RoPE."""
+    from repro.models.layers import apply_mrope, apply_rope
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 10, 4, 16))
+    pos1d = jnp.arange(10)[None].repeat(2, 0)
+    pos3d = jnp.broadcast_to(pos1d[None], (3, 2, 10))
+    a = apply_rope(x, pos1d, 10_000.0)
+    b = apply_mrope(x, pos3d, 10_000.0, (4, 2, 2))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_mla_latent_chunked_matches_full():
+    """The prefill latent-chunked scan == full-expansion MLA attention."""
+    cfg = registry.get_config("deepseek-v2-236b", smoke=True).replace(
+        attn_chunk=8)
+    params = A.init_mla(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 20
+    x = jax.random.normal(jax.random.PRNGKey(2), (B, S, cfg.d_model)) * 0.3
+    pos = jnp.arange(S)[None].repeat(B, 0)
+    ref = A.mla_forward(params, x, cfg, pos)
+    cache = A.init_mla_cache(cfg, B, S)
+    y, cache2 = A.mla_prefill(params, x, cfg, pos, cache)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=2e-5)
+    # and decode continues exactly from the latent cache it filled
+    x2 = jax.random.normal(jax.random.PRNGKey(3), (B, 1, cfg.d_model)) * 0.3
+    full = A.mla_forward(params, jnp.concatenate([x, x2], 1), cfg,
+                         jnp.arange(S + 1)[None].repeat(B, 0))
+    cache_big = A.init_mla_cache(cfg, B, S + 1)
+    _, cache_big = A.mla_prefill(params, x, cfg, pos, cache_big)
+    y2, _ = A.mla_decode(params, x2, cfg,
+                         jnp.full((B, 1), S), cache_big, S)
+    np.testing.assert_allclose(np.asarray(y2[:, 0]), np.asarray(full[:, S]),
+                               atol=2e-4)
+
+
+def test_kv_headmap_nondividing_gqa():
+    """Padded q heads with non-dividing kv (qwen1.5: 32 q over 20 kv):
+    real heads keep exact MHA semantics."""
+    q, k, v, pos = _qkv(B=1, S=16, Hq=8, Hkv=5, D=8)
+    out = A.attention_reference(q, k, v, pos, pos, causal=True)
+    # heads 0..4 must equal plain MHA on (q[:5], k, v)
+    ref5 = A.attention_reference(q[:, :, :5], k, v, pos, pos, causal=True)
+    np.testing.assert_allclose(np.asarray(out[:, :, :5]), np.asarray(ref5),
+                               atol=1e-6)

@@ -1,0 +1,75 @@
+"""Episode environment protocol (§5.1) and outcome semantics."""
+import numpy as np
+import pytest
+
+from repro.core import EnvConfig, ProvisionEnv
+from repro.core.provisioner import collect_offline_samples
+from repro.sim import synthesize_trace
+from repro.sim.trace import V100
+
+HOUR = 3600.0
+
+
+@pytest.fixture(scope="module")
+def heavy_env():
+    jobs = synthesize_trace(V100, months=1, seed=5, load_scale=1.0)
+    return ProvisionEnv(jobs, EnvConfig(n_nodes=V100.n_nodes, history=12,
+                                        interval=1800.0), seed=0)
+
+
+@pytest.fixture(scope="module")
+def light_env():
+    jobs = synthesize_trace(V100, months=1, seed=5, load_scale=0.3)
+    return ProvisionEnv(jobs, EnvConfig(n_nodes=V100.n_nodes, history=12,
+                                        interval=1800.0), seed=0)
+
+
+def test_reset_observation(heavy_env):
+    obs = heavy_env.reset(t_start=None)
+    assert obs["matrix"].shape == (12, 40)
+    assert np.isfinite(obs["matrix"]).all()
+    assert obs["pred_remaining"] > 0
+    assert 0.0 <= obs["time_pos"] <= 1.0
+
+
+def test_immediate_submit_overlaps_on_light_load(light_env):
+    obs = light_env.reset(t_start=None)
+    obs, r, done, info = light_env.step(1)
+    assert done
+    assert info["kind"] == "overlap"       # empty cluster: successor starts
+    assert r <= 0.0                        # overlap penalty (possibly ~0)
+
+
+def test_reactive_interruption_equals_wait(heavy_env):
+    obs = heavy_env.reset(t_start=None)
+    done, info = False, {}
+    while not done:
+        a = 1 if obs["pred_remaining"] <= 0 else 0
+        obs, r, done, info = heavy_env.step(a)
+    if info["kind"] == "interrupt":
+        assert info["amount_s"] == pytest.approx(info["wait_s"], rel=0.05)
+
+
+def test_forced_fallback_terminates(heavy_env):
+    obs = heavy_env.reset(t_start=None)
+    steps = 0
+    done = False
+    while not done:
+        obs, r, done, info = heavy_env.step(0)     # never submit voluntarily
+        steps += 1
+        assert steps < 10_000
+    assert info.get("forced", False) or info["kind"] in ("interrupt", "overlap")
+
+
+def test_offline_samples_shapes(heavy_env):
+    samples = collect_offline_samples(heavy_env, n_episodes=1, n_points=3,
+                                      seed=0)
+    assert len(samples) == 3
+    for s in samples:
+        assert s["matrix"].shape == (12, 40)
+        assert np.isfinite(s["reward"])
+        assert s["kind"] in ("interrupt", "overlap")
+    # later submission points should not increase overlap (monotone trend
+    # in expectation; we only check the samples are not constant)
+    rewards = [s["reward"] for s in samples]
+    assert len(set(np.round(rewards, 6))) >= 1

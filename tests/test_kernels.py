@@ -1,0 +1,153 @@
+"""Per-kernel shape/dtype sweeps vs pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.moe_gemm import expert_mlp, moe_grouped_gemm
+from repro.kernels.moe_gemm.ref import expert_mlp_ref, grouped_gemm_ref
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.kernels.ssd import ssd
+from repro.kernels.ssd.ref import ssd_sequential_ref
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+# ------------------------------------------------------------------ flash
+@pytest.mark.parametrize("B,Hq,Hkv,S,D", [
+    (1, 4, 4, 128, 64), (2, 8, 2, 128, 64), (1, 4, 1, 256, 128),
+    (1, 2, 2, 96, 64),   # non-block-multiple sequence
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_shapes(B, Hq, Hkv, S, D, causal):
+    ks = jax.random.split(jax.random.PRNGKey(S + Hq), 3)
+    q = jax.random.normal(ks[0], (B, Hq, S, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Hkv, S, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Hkv, S, D), jnp.float32)
+    out = flash_attention_fwd(q, k, v, causal=causal, block_q=64, block_kv=64,
+                              interpret=True)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 4, 128, 64)).astype(dtype)
+    k = jax.random.normal(ks[1], (1, 4, 128, 64)).astype(dtype)
+    v = jax.random.normal(ks[2], (1, 4, 128, 64)).astype(dtype)
+    out = flash_attention_fwd(q, k, v, causal=True, interpret=True)
+    ref = attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                        v.astype(jnp.float32), causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref),
+                               atol=float(TOL[dtype]))
+
+
+def test_flash_attention_window_and_softcap():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 2, 256, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 2, 256, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 2, 256, 64), jnp.float32)
+    for window, cap in [(64, 0.0), (0, 30.0), (64, 30.0)]:
+        out = flash_attention_fwd(q, k, v, causal=True, window=window,
+                                  softcap=cap, block_q=64, block_kv=64,
+                                  interpret=True)
+        ref = attention_ref(q, k, v, causal=True, window=window, softcap=cap)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+# ---------------------------------------------------------------- rmsnorm
+@settings(max_examples=20, deadline=None)
+@given(rows=st.integers(1, 300), d=st.sampled_from([64, 128, 256]),
+       gemma=st.booleans())
+def test_rmsnorm_property(rows, d, gemma):
+    key = jax.random.PRNGKey(rows * d)
+    x = jax.random.normal(key, (rows, d), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (d,), jnp.float32)
+    out = rmsnorm(x, w, gemma=gemma, interpret=True)
+    ref = rmsnorm_ref(x, w, gemma=gemma)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_dtype(dtype):
+    x = (jax.random.normal(jax.random.PRNGKey(0), (64, 128)) * 3).astype(dtype)
+    w = jax.random.normal(jax.random.PRNGKey(1), (128,)).astype(dtype)
+    out = rmsnorm(x, w, interpret=True)
+    ref = rmsnorm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=float(TOL[dtype]))
+
+
+# -------------------------------------------------------------------- ssd
+@pytest.mark.parametrize("S,H,P,N,chunk", [
+    (64, 2, 16, 16, 16), (96, 4, 32, 16, 32), (50, 2, 16, 8, 16)])
+def test_ssd_vs_sequential(S, H, P, N, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(S + H), 5)
+    Bz = 2
+    x = jax.random.normal(ks[0], (Bz, S, H, P), jnp.float32) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bz, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    B = jax.random.normal(ks[3], (Bz, S, 1, N)) * 0.3
+    C = jax.random.normal(ks[4], (Bz, S, 1, N)) * 0.3
+    D = jnp.ones((H,))
+    out = ssd(x, dt, A, B, C, D, chunk=chunk, interpret=True)
+    ref = ssd_sequential_ref(x, dt, A, jnp.repeat(B, H, 2),
+                             jnp.repeat(C, H, 2), D)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref, np.float32),
+                               atol=5e-5)
+
+
+def test_ssd_matches_model_oracle():
+    """Kernel == the model substrate's chunked implementation."""
+    from repro.models.ssm import ssd_chunked
+    ks = jax.random.split(jax.random.PRNGKey(9), 5)
+    Bz, S, H, P, N = 1, 64, 2, 16, 16
+    x = jax.random.normal(ks[0], (Bz, S, H, P), jnp.float32) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bz, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    B = jax.random.normal(ks[3], (Bz, S, 1, N)) * 0.3
+    C = jax.random.normal(ks[4], (Bz, S, 1, N)) * 0.3
+    D = jnp.ones((H,))
+    out = ssd(x, dt, A, B, C, D, chunk=16, interpret=True)
+    ref, _ = ssd_chunked(x, dt, A, B, C, D, 16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=5e-5)
+
+
+# --------------------------------------------------------------- moe_gemm
+@pytest.mark.parametrize("E,C,d,f", [(2, 64, 128, 64), (5, 96, 160, 96),
+                                     (1, 32, 64, 256)])
+def test_grouped_gemm_shapes(E, C, d, f):
+    ks = jax.random.split(jax.random.PRNGKey(E * C), 2)
+    x = jax.random.normal(ks[0], (E, C, d), jnp.float32)
+    w = jax.random.normal(ks[1], (E, d, f), jnp.float32) / np.sqrt(d)
+    out = moe_grouped_gemm(x, w, interpret=True)
+    ref = grouped_gemm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_expert_mlp_fused():
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    E, C, d, f = 3, 64, 96, 64
+    x = jax.random.normal(ks[0], (E, C, d), jnp.float32)
+    wi = jax.random.normal(ks[1], (E, d, 2, f), jnp.float32) / np.sqrt(d)
+    wo = jax.random.normal(ks[2], (E, f, d), jnp.float32) / np.sqrt(f)
+    out = expert_mlp(x, wi, wo, interpret=True)
+    ref = expert_mlp_ref(x, wi, wo)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_grouped_gemm_dtype(dtype):
+    ks = jax.random.split(jax.random.PRNGKey(4), 2)
+    x = jax.random.normal(ks[0], (2, 64, 128)).astype(dtype)
+    w = (jax.random.normal(ks[1], (2, 128, 64)) / np.sqrt(128)).astype(dtype)
+    out = moe_grouped_gemm(x, w, interpret=True)
+    ref = grouped_gemm_ref(x.astype(jnp.float32), w.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref),
+                               atol=float(TOL[dtype]))

@@ -1,0 +1,56 @@
+"""Launcher entrypoints + variant plumbing (single device)."""
+import subprocess
+import sys
+
+import jax
+import pytest
+
+
+def run_mod(args, timeout=300):
+    return subprocess.run(
+        [sys.executable, "-m"] + args, capture_output=True, text=True,
+        timeout=timeout, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                              "HOME": "/root"}, cwd=".")
+
+
+def test_train_launcher_smoke(tmp_path):
+    r = run_mod(["repro.launch.train", "--arch", "tinyllama-1.1b", "--smoke",
+                 "--steps", "3", "--batch", "2", "--seq", "16",
+                 "--ckpt-dir", str(tmp_path)])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "exit: budget at step 3" in r.stdout
+    # resume
+    r2 = run_mod(["repro.launch.train", "--arch", "tinyllama-1.1b", "--smoke",
+                  "--steps", "2", "--batch", "2", "--seq", "16",
+                  "--ckpt-dir", str(tmp_path)])
+    assert r2.returncode == 0, r2.stderr[-2000:]
+    assert "resumed at step 3" in r2.stdout
+
+
+def test_serve_launcher_smoke():
+    r = run_mod(["repro.launch.serve", "--arch", "tinyllama-1.1b", "--smoke",
+                 "--requests", "2", "--max-new", "4", "--s-max", "32"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "tok/s" in r.stdout
+
+
+def test_dryrun_variant_flags_parse():
+    """Variant plumbing: config overrides apply without touching jax."""
+    from repro.launch import dryrun
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh()
+    cfg = dryrun.dryrun_config("qwen2-moe-a2.7b", mesh,
+                               {"moe_scheme": "sorted", "attn_chunk": 512})
+    assert cfg.moe_scheme == "sorted" and cfg.attn_chunk == 512
+    cfg2 = dryrun.dryrun_config("zamba2-7b", mesh,
+                                {"remat_save_outputs": True})
+    assert cfg2.remat_save_outputs
+
+
+def test_seq_parallel_constraint_noop_offline():
+    """constrain('B','S',None) is a no-op outside activation_context."""
+    import jax.numpy as jnp
+    from repro.dist.sharding import constrain
+    x = jnp.ones((2, 8, 4))
+    y = constrain(x, "B", "S", None)
+    assert y.shape == x.shape

@@ -1,0 +1,99 @@
+"""MoE layer semantics: scheme equivalence, capacity drops, shared experts."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import moe as moe_mod
+from repro.models import registry
+from repro.models.common import ModelConfig
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = ModelConfig(n_layers=1, d_model=32, n_heads=2, n_kv_heads=2,
+                      d_ff=64, vocab_size=64, n_experts=8, top_k=2,
+                      expert_d_ff=48, n_shared_experts=1, shared_d_ff=48,
+                      capacity_factor=8.0,   # high: no drops
+                      compute_dtype="float32", param_dtype="float32")
+    params = moe_mod.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32)) * 0.5
+    return cfg, params, x
+
+
+def test_topk_vs_sorted_equivalent_without_drops(setup):
+    """With capacity >> demand both dispatch schemes compute the same
+    function (same routing, no drops)."""
+    cfg, params, x = setup
+    y1, _ = moe_mod.topk_moe(params, x, cfg)
+    y2, _ = moe_mod.topk_moe_sorted(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+
+
+def test_capacity_drops_reduce_output(setup):
+    """At tiny capacity most tokens drop to the shared-expert path only."""
+    cfg, params, x = setup
+    y_full, _ = moe_mod.topk_moe(params, x, cfg)
+    tight = cfg.replace(capacity_factor=0.1)
+    y_drop, _ = moe_mod.topk_moe(params, x, tight)
+    # dropped tokens lose their routed contribution -> outputs differ
+    assert float(jnp.abs(y_full - y_drop).max()) > 1e-4
+
+
+def test_gate_normalization(setup):
+    cfg, params, x = setup
+    # dense MoE (Eq. 7) output is a convex combination: bounded by experts
+    y, aux = moe_mod.dense_moe(params, x, cfg)
+    assert y.shape == x.shape
+    assert float(aux) == 0.0
+
+
+def test_aux_loss_balanced_vs_skewed():
+    """The load-balance loss must be higher for a skewed router."""
+    cfg = ModelConfig(n_layers=1, d_model=16, n_heads=2, n_kv_heads=2,
+                      d_ff=32, vocab_size=64, n_experts=4, top_k=1,
+                      expert_d_ff=32, compute_dtype="float32",
+                      param_dtype="float32", router_aux_coef=1.0)
+    params = moe_mod.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 16))
+    _, aux_balanced = moe_mod.topk_moe(params, x, cfg)
+    # skew the router hard toward expert 0
+    skew = dict(params)
+    skew["router"] = params["router"].at[:, 0].add(100.0)
+    _, aux_skewed = moe_mod.topk_moe(skew, x, cfg)
+    assert float(aux_skewed) > float(aux_balanced)
+
+
+def test_zero_pod_opt_specs():
+    from jax.sharding import AbstractMesh, PartitionSpec as P
+    from repro.dist import sharding as shd
+    from repro.models import transformer
+    from repro.train.optimizer import OptimizerConfig, init_opt_state
+    mesh = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    cfg = registry.get_config("tinyllama-1.1b").padded(16)
+    pshape = jax.eval_shape(lambda: transformer.init(jax.random.PRNGKey(0), cfg))
+    oshape = jax.eval_shape(lambda: init_opt_state(pshape, OptimizerConfig()))
+    specs = shd.opt_state_pspecs(cfg, oshape, mesh, zero_pod=True)
+    flat = jax.tree.leaves(specs["m"], is_leaf=lambda x: isinstance(x, P))
+    n_pod = sum(1 for s in flat if "pod" in jax.tree.leaves(tuple(s)))
+    assert n_pod > 0            # moments picked up a pod dim
+    # and baseline specs have none
+    specs0 = shd.opt_state_pspecs(cfg, oshape, mesh, zero_pod=False)
+    flat0 = jax.tree.leaves(specs0["m"], is_leaf=lambda x: isinstance(x, P))
+    assert all("pod" not in jax.tree.leaves(tuple(s)) for s in flat0)
+
+
+def test_capacity_groups_match_ungrouped_without_drops():
+    """moe_group_size routing == per-sequence routing when capacity is
+    ample (grouping only changes DROP boundaries)."""
+    cfg = ModelConfig(n_layers=1, d_model=16, n_heads=2, n_kv_heads=2,
+                      d_ff=32, vocab_size=64, n_experts=4, top_k=2,
+                      expert_d_ff=32, capacity_factor=16.0,
+                      compute_dtype="float32", param_dtype="float32",
+                      moe_group_size=8)
+    params = moe_mod.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 16)) * 0.5
+    y_grouped, _ = moe_mod.topk_moe(params, x, cfg)
+    y_flat, _ = moe_mod.topk_moe(params, x, cfg.replace(moe_group_size=32))
+    np.testing.assert_allclose(np.asarray(y_grouped), np.asarray(y_flat),
+                               atol=1e-5)

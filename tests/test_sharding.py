@@ -1,0 +1,111 @@
+"""Sharding rules: divisibility fallbacks, padding, cache specs, batch axes.
+Uses AbstractMesh — no devices needed (the 512-device mesh exists only in
+the dry-run process)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.dist import sharding as shd
+from repro.models import registry, transformer
+
+MESH = AbstractMesh((16, 16), ("data", "model"))
+MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_axis_size():
+    assert shd.axis_size(MESH, "model") == 16
+    assert shd.axis_size(MESH, "pod") == 1
+    assert shd.axis_size(MESH3, "pod") == 2
+
+
+@pytest.mark.parametrize("batch,expect", [
+    (256, ("data",)), (1, ()), (8, ()), (32, ("data",))])
+def test_batch_axes_single_pod(batch, expect):
+    assert shd.batch_axes(MESH, batch) == expect
+
+
+def test_batch_axes_multi_pod():
+    assert shd.batch_axes(MESH3, 256) == ("pod", "data")
+    assert shd.batch_axes(MESH3, 2) == ("pod",)
+
+
+def test_head_and_vocab_padding():
+    cfg = registry.get_config("qwen1.5-4b").padded(16)
+    assert cfg.nq == 32 and cfg.nkv == 20          # q pads; kv never does
+    assert cfg.vocab % 16 == 0
+    cfg2 = registry.get_config("mamba2-1.3b").padded(16)
+    assert cfg2.vocab == 50304                      # 50280 -> /16 and /128
+    cfg3 = registry.get_config("tinyllama-1.1b").padded(16)
+    assert cfg3.nq == 32 and cfg3.nkv == 4          # kv stays (replicated)
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "deepseek-v2-236b",
+                                  "qwen2-moe-a2.7b", "mamba2-1.3b",
+                                  "zamba2-7b", "gemma3-27b"])
+def test_param_specs_divisible(arch):
+    """Every sharded dim must divide its mesh axis."""
+    cfg = registry.get_config(arch, smoke=False).padded(16)
+    shapes = jax.eval_shape(lambda: transformer.init(jax.random.PRNGKey(0), cfg))
+    specs = shd.params_pspecs(cfg, shapes, MESH)
+    flat_shapes = jax.tree.leaves(shapes)
+    flat_specs = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_shapes) == len(flat_specs)
+    for leaf, spec in zip(flat_shapes, flat_specs):
+        for dim, ax in zip(leaf.shape, tuple(spec)):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            prod = 1
+            for a in axes:
+                prod *= shd.axis_size(MESH, a)
+            assert dim % prod == 0, (arch, leaf.shape, tuple(spec))
+
+
+def test_expert_sharding_rules():
+    # deepseek: 160 % 16 == 0 -> experts on model
+    cfg = registry.get_config("deepseek-v2-236b").padded(16)
+    shapes = jax.eval_shape(lambda: transformer.init(jax.random.PRNGKey(0), cfg))
+    specs = shd.params_pspecs(cfg, shapes, MESH)
+    wi_spec = specs["segments"][1]["b0"]["ffn"]["experts"]["wi"]
+    assert tuple(wi_spec)[1] == "model"     # (stack, E, d, 2, ff)
+    # qwen2-moe: 60 % 16 != 0 -> expert-internal ff on model
+    cfg2 = registry.get_config("qwen2-moe-a2.7b").padded(16)
+    shapes2 = jax.eval_shape(lambda: transformer.init(jax.random.PRNGKey(1), cfg2))
+    specs2 = shd.params_pspecs(cfg2, shapes2, MESH)
+    wi2 = specs2["segments"][0]["b0"]["ffn"]["experts"]["wi"]
+    assert tuple(wi2)[1] is None and tuple(wi2)[-1] == "model"
+
+
+def test_cache_specs_seq_sharding():
+    cfg = registry.get_config("tinyllama-1.1b").padded(16)
+    cache = jax.eval_shape(
+        lambda: transformer.init_cache(cfg, 128, 32768, dtype=jnp.bfloat16))
+    specs = shd.cache_pspecs(cfg, cache, MESH, batch=128)
+    kspec = specs["segments"][0]["b0"]["k"]
+
+    def norm(x):
+        return (x,) if isinstance(x, str) else tuple(x) if x else None
+    assert norm(tuple(kspec)[1]) == ("data",)      # batch
+    assert norm(tuple(kspec)[2]) == ("model",)     # sequence on model
+    # long-context B=1: sequence takes data+model
+    specs1 = shd.cache_pspecs(cfg, jax.eval_shape(
+        lambda: transformer.init_cache(cfg, 1, 524288, dtype=jnp.bfloat16)),
+        MESH, batch=1)
+    k1 = specs1["segments"][0]["b0"]["k"]
+    assert k1[1] is None
+    assert set(k1[2]) == {"data", "model"}
+
+
+def test_shared_attn_not_stacked():
+    cfg = registry.get_config("zamba2-7b").padded(16)
+    shapes = jax.eval_shape(lambda: transformer.init(jax.random.PRNGKey(0), cfg))
+    specs = shd.params_pspecs(cfg, shapes, MESH)
+    # shared attention block (b6 of segment 0) has NO stack dim: wq is 3D
+    shared_wq = shapes["segments"][0]["b6"]["attn"]["wq"]
+    assert shared_wq.ndim == 3
+    spec = specs["segments"][0]["b6"]["attn"]["wq"]
+    assert tuple(spec)[1] == "model"     # (d, H, hd) without stack prefix
+    # stacked mamba block: 4D with leading None
+    stacked = specs["segments"][0]["b0"]["mamba"]["w_x"]
+    assert tuple(stacked)[0] is None and len(tuple(stacked)) == 3

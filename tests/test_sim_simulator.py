@@ -1,0 +1,127 @@
+"""Simulator invariants: allocation safety, completion, priority,
+backfill correctness, fast-vs-exact fidelity (§5.2)."""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.sim import Job, SlurmSimulator, replay, synthesize_trace
+from repro.sim.trace import V100, RTX
+
+HOUR = 3600.0
+
+
+def mk_jobs(specs):
+    return [Job(job_id=i + 1, user_id=0, submit_time=float(t),
+                runtime=float(rt), time_limit=float(tl), n_nodes=int(n))
+            for i, (t, rt, tl, n) in enumerate(specs)]
+
+
+def test_single_job_runs_immediately():
+    sim = SlurmSimulator(4)
+    sim.load(mk_jobs([(0.0, 100.0, 200.0, 2)]))
+    sim.run_to_completion()
+    j = sim.finished[0]
+    assert j.start_time == 0.0
+    assert j.end_time == 100.0
+
+
+def test_never_overallocates_and_all_finish():
+    jobs = synthesize_trace(V100, months=1, seed=7, load_scale=0.9)[:400]
+    sim = SlurmSimulator(V100.n_nodes)
+    sim.load([dataclasses.replace(j) for j in jobs])
+    # step through and check allocation invariant at every event boundary
+    t = jobs[0].submit_time
+    end = jobs[-1].submit_time + 90 * 24 * HOUR
+    while sim._events and t < end:
+        sim.run_until(t)
+        assert 0 <= sim.cluster.n_busy <= sim.cluster.n_available
+        t += 6 * HOUR
+    sim.run_to_completion()
+    assert len(sim.finished) == len(jobs)
+    assert all(j.start_time >= j.submit_time for j in sim.finished)
+
+
+def test_fcfs_when_no_contention():
+    # 3 jobs, plenty of nodes: start == submit
+    sim = SlurmSimulator(10)
+    sim.load(mk_jobs([(0, 50, 100, 2), (5, 50, 100, 2), (9, 50, 100, 2)]))
+    sim.run_to_completion()
+    for j in sim.finished:
+        assert j.start_time == j.submit_time
+
+
+def test_backfill_fills_holes_without_delaying_head():
+    # node pool 4; big job blocks (needs 4); small short job can backfill
+    sim = SlurmSimulator(4, backfill=True)
+    jobs = mk_jobs([
+        (0.0, 100.0, 100.0, 3),    # A: runs now (3 nodes)
+        (1.0, 200.0, 200.0, 4),    # B: blocked head (needs 4, free 1)
+        (2.0, 50.0, 60.0, 1),      # C: fits the 1-node hole, ends at 62 < 100
+    ])
+    sim.load(jobs)
+    sim.run_to_completion()
+    a, b, c = sim.finished[0], [j for j in sim.finished if j.job_id == 2][0], \
+        [j for j in sim.finished if j.job_id == 3][0]
+    assert c.start_time < 10.0          # backfilled immediately
+    assert b.start_time == pytest.approx(100.0, abs=1.0)  # not delayed by C
+
+
+def test_no_backfill_head_blocks_everything():
+    sim = SlurmSimulator(4, backfill=False)
+    jobs = mk_jobs([
+        (0.0, 100.0, 100.0, 3),
+        (1.0, 200.0, 200.0, 4),
+        (2.0, 50.0, 60.0, 1),
+    ])
+    sim.load(jobs)
+    sim.run_to_completion()
+    c = [j for j in sim.finished if j.job_id == 3][0]
+    assert c.start_time >= 100.0        # waits behind the blocked head
+
+
+def test_limit_enforced():
+    sim = SlurmSimulator(2)
+    sim.load(mk_jobs([(0.0, 500.0, 100.0, 1)]))   # runtime > limit
+    sim.run_to_completion()
+    assert sim.finished[0].end_time == 100.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.tuples(
+    st.floats(0, 1000), st.floats(1, 500), st.floats(1, 500),
+    st.integers(1, 8)), min_size=1, max_size=40))
+def test_property_allocation_and_causality(specs):
+    specs = [(t, rt, max(rt, tl), n) for (t, rt, tl, n) in specs]
+    jobs = mk_jobs(sorted(specs, key=lambda s: s[0]))
+    sim = SlurmSimulator(8)
+    sim.load(jobs)
+    sim.run_to_completion()
+    assert len(sim.finished) == len(jobs)
+    for j in sim.finished:
+        assert j.start_time >= j.submit_time
+        assert j.end_time <= j.start_time + j.time_limit + 1e-6
+    # node-time conservation: busy integral equals sum of allocations
+    events = []
+    for j in sim.finished:
+        events.append((j.start_time, j.n_nodes))
+        events.append((j.end_time, -j.n_nodes))
+    events.sort()
+    busy = 0
+    for _, d in events:
+        busy += d
+        assert 0 <= busy <= 8
+
+
+def test_fidelity_fast_vs_exact():
+    """§5.2: makespan diff < 2.5%, JCT geomean ratio < 1.15."""
+    jobs = synthesize_trace(V100, months=1, seed=2, load_scale=0.9)[:800]
+    fast = replay(jobs, V100.n_nodes, mode="fast")
+    exact = replay(jobs, V100.n_nodes, mode="exact", sched_interval=300.0)
+    mk_diff = abs(fast.makespan() - exact.makespan()) / exact.makespan()
+    assert mk_diff < 0.025
+    j1, j2 = np.sort(fast.jcts()), np.sort(exact.jcts())
+    n = min(len(j1), len(j2))
+    geo = np.exp(np.mean(np.abs(np.log((j1[:n] + 1) / (j2[:n] + 1)))))
+    assert geo < 1.15

@@ -1,0 +1,60 @@
+"""Trace synthesis calibration (Table 1 / §3.1) and cleaning (§3.2)."""
+import numpy as np
+import pytest
+
+from repro.sim import clean_trace, split_trace, synthesize_trace, trace_stats
+from repro.sim.trace import A100, RTX, V100
+
+
+@pytest.mark.parametrize("profile", [V100, RTX, A100], ids=lambda p: p.name)
+def test_calibration(profile):
+    jobs = synthesize_trace(profile, months=2, seed=3)
+    s = trace_stats(jobs)
+    assert abs(s["jobs_per_month"] - profile.jobs_per_month) \
+        / profile.jobs_per_month < 0.05
+    assert abs(s["short_frac"] - profile.short_job_frac) < 0.05
+    # multi-node jobs take a disproportionate node-hour share (§3.1)
+    if s["multi_node_frac"] > 0.05:
+        assert s["multi_node_hour_share"] > 2 * s["multi_node_frac"]
+
+
+def test_deterministic_seeding():
+    a = synthesize_trace(V100, months=1, seed=11)
+    b = synthesize_trace(V100, months=1, seed=11)
+    assert len(a) == len(b)
+    assert all(x.submit_time == y.submit_time and x.runtime == y.runtime
+               for x, y in zip(a[:100], b[:100]))
+    c = synthesize_trace(V100, months=1, seed=12)
+    assert any(x.submit_time != y.submit_time for x, y in zip(a[:100], c[:100]))
+
+
+def test_cleaning_oversized_and_subjobs():
+    raw = synthesize_trace(V100, months=1, seed=4, include_noise=True)
+    assert any(j.n_nodes > V100.n_nodes for j in raw)
+    assert any(".sub_" in j.job_name for j in raw)
+    clean = clean_trace(raw, V100.n_nodes)
+    assert all(j.n_nodes <= V100.n_nodes for j in clean)
+    assert not any(".sub_" in j.job_name for j in clean)
+    # merged sub-jobs span first-submit .. last-end
+    arrays = [j for j in clean if j.job_name.startswith("array_")]
+    assert arrays and all(a.runtime > 0 for a in arrays)
+
+
+def test_split_80_20():
+    jobs = synthesize_trace(V100, months=2, seed=5)
+    train, val = split_trace(jobs, 0.8)
+    assert len(train) + len(val) == len(jobs)
+    assert train[-1].submit_time <= val[0].submit_time
+    frac = len(train) / len(jobs)
+    assert 0.6 < frac < 0.95
+
+
+def test_load_scale_monotone():
+    from repro.sim import replay
+    from repro.sim.trace import V100
+    waits = []
+    for scale in (0.5, 1.0):
+        jobs = synthesize_trace(V100, months=1, seed=6, load_scale=scale)
+        sim = replay(jobs, V100.n_nodes)
+        waits.append(float(np.mean(sim.waits())))
+    assert waits[1] > waits[0]

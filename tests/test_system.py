@@ -1,0 +1,99 @@
+"""End-to-end behaviour: the Mirage loop (simulate -> learn -> provision)
+and the two-plane integration (provisioner + chained training)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (DQNConfig, DQNLearner, EnvConfig, FoundationConfig,
+                        MiragePolicy, ProvisionEnv, build_policy, evaluate,
+                        pretrain_foundation, train_online_dqn)
+from repro.core.provisioner import collect_offline_samples
+from repro.sim import split_trace, synthesize_trace
+from repro.sim.trace import V100
+
+HOUR = 3600.0
+
+
+@pytest.fixture(scope="module")
+def setup():
+    jobs = synthesize_trace(V100, months=2, seed=9, load_scale=1.0)
+    train, val = split_trace(jobs, 0.8)
+    env_train = ProvisionEnv(jobs, EnvConfig(n_nodes=V100.n_nodes, history=12,
+                                             interval=1800.0), seed=0)
+    samples = collect_offline_samples(env_train, n_episodes=3, n_points=4,
+                                      seed=1)
+    return env_train, samples
+
+
+def test_heuristics_ordering(setup):
+    """avg must not be (much) worse than reactive under heavy load — the
+    paper's core observation that proactivity pays when waits are long."""
+    env, samples = setup
+    r_reactive = evaluate(env, build_policy("reactive", env), episodes=6,
+                          seed=7)
+    pol_avg = build_policy("avg", env)
+    pol_avg.avg.waits = [s["wait_s"] for s in samples]   # warm start T_avg
+    r_avg = evaluate(env, pol_avg, episodes=6, seed=7)
+    assert r_avg.mean_interruption_h <= r_reactive.mean_interruption_h * 1.05
+
+
+def test_tree_policy_beats_reactive(setup):
+    env, samples = setup
+    r_reactive = evaluate(env, build_policy("reactive", env), episodes=6,
+                          seed=11)
+    pol = build_policy("random_forest", env, offline_samples=samples, seed=0)
+    r_tree = evaluate(env, pol, episodes=6, seed=11)
+    # learned wait estimate should reduce interruption on the heavy trace
+    assert r_tree.mean_interruption_h <= r_reactive.mean_interruption_h * 1.05
+
+
+def test_rl_end_to_end_improves_over_never_submitting(setup):
+    env, samples = setup
+    fc = dataclasses.replace(FoundationConfig(kind="transformer").reduced(),
+                             kind="transformer", history=12)
+    params, losses = pretrain_foundation(fc, samples, epochs=4, seed=0)
+    assert losses[-1] <= losses[0]             # offline pretraining fits
+    learner = DQNLearner(fc, DQNConfig(batch_size=8), seed=0, params=params)
+    rets = train_online_dqn(env, learner, episodes=4, seed=0)
+    assert all(np.isfinite(rets))
+    res = evaluate(env, MiragePolicy("transformer+dqn", learner=learner),
+                   episodes=4, seed=13)
+    s = res.summary()
+    assert np.isfinite(s["mean_interruption_h"])
+    assert s["n_episodes"] == 4
+
+
+def test_provisioned_chain_integration(tmp_path):
+    """Two-plane integration: the provisioner decides WHEN to submit the
+    successor while the payload trains; the successor resumes from the
+    checkpoint — zero lost work, interruption = queue gap only."""
+    import jax
+    from repro.data import DataConfig, data_iterator
+    from repro.models import registry
+    from repro.train import ChainConfig, ChainedTrainer, OptimizerConfig
+
+    jobs = synthesize_trace(V100, months=1, seed=3, load_scale=0.6)
+    env = ProvisionEnv(jobs, EnvConfig(n_nodes=V100.n_nodes, history=8,
+                                       interval=1800.0), seed=0)
+    obs = env.reset()
+    # payload: sub-job 1 trains while the predecessor "runs"
+    cfg = registry.get_config("tinyllama-1.1b", smoke=True)
+    ocfg = OptimizerConfig(lr=1e-3, warmup_steps=1, total_steps=100)
+    chain = ChainConfig(ckpt_dir=str(tmp_path), ckpt_every=3)
+    t1 = ChainedTrainer(cfg, ocfg, chain, data_iterator(
+        cfg, DataConfig(batch=2, seq_len=16)), seed=0)
+    t1.run_subjob(5)
+    # control plane: avg-policy decides submission of the successor
+    pol = build_policy("avg", env)
+    done, info = False, {}
+    while not done:
+        a = pol.act(obs)
+        obs, r, done, info = env.step(a)
+    assert info["kind"] in ("interrupt", "overlap")
+    # successor sub-job resumes exactly at step 5
+    t2 = ChainedTrainer(cfg, ocfg, chain, data_iterator(
+        cfg, DataConfig(batch=2, seq_len=16), start_step=5), seed=1)
+    assert t2.maybe_resume() and t2.step == 5
+    info2 = t2.run_subjob(3)
+    assert info2["steps_done"] == 8
