@@ -1,0 +1,63 @@
+#!/usr/bin/env python
+"""Import/collection guard: fails fast if any repro submodule cannot be
+imported or any test module cannot be collected — the failure mode that
+silently knocks out whole test files when an optional dependency leaks
+into an unconditional import (optional-dependency policy, ROADMAP.md).
+
+Usage:
+  PYTHONPATH=src python scripts/check_collect.py
+Runs as the first step of the tier-1 verify line, before test execution.
+"""
+from __future__ import annotations
+
+import importlib
+import pathlib
+import pkgutil
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+SKIP = {"repro.launch.dryrun"}       # mutates XLA_FLAGS at import, by design
+
+
+def walk_module_names() -> list:
+    """Every repro module subject to the import guard (single source of
+    truth — tests/test_collect_imports.py parametrizes over this)."""
+    import repro
+    names = ["repro"]
+    names += [m.name for m in pkgutil.walk_packages(repro.__path__,
+                                                    prefix="repro.")
+              if m.name not in SKIP]
+    return names
+
+
+def check_imports() -> int:
+    bad = 0
+    for name in walk_module_names():
+        try:
+            importlib.import_module(name)
+        except Exception as e:                      # noqa: BLE001
+            print(f"[import FAIL] {name}: {type(e).__name__}: {e}")
+            bad += 1
+    return bad
+
+
+def check_collection() -> int:
+    r = subprocess.run(
+        [sys.executable, "-m", "pytest", "--collect-only", "-q",
+         "-p", "no:cacheprovider", str(ROOT / "tests")],
+        capture_output=True, text=True, cwd=ROOT)
+    if r.returncode != 0:
+        tail = "\n".join(r.stdout.splitlines()[-25:])
+        print(f"[collect FAIL]\n{tail}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    failures = check_imports() + check_collection()
+    if failures:
+        sys.exit(f"{failures} import/collection failure(s)")
+    print("all repro modules import; all test modules collect")

@@ -24,7 +24,8 @@ from .dqn import DQNConfig, DQNLearner
 from .foundation import (FoundationConfig, init_foundation, q_values,
                          reward_prediction)
 from .pg import PGConfig, PGLearner
-from .provisioner import ProvisionEnv, collect_offline_samples
+from .provisioner import (ProvisionEnv, VectorProvisionEnv,
+                          collect_offline_samples)
 from .replay import ReplayBuffer
 from .state import STATE_DIM
 from .trees import GradientBoosting, RandomForest
@@ -78,44 +79,72 @@ def pretrain_foundation(fc: FoundationConfig, samples: List[Dict],
 
 
 # ------------------------------------------------------------ online RL
+def _rollout_batch(venv: VectorProvisionEnv, act_batch) -> Tuple[
+        List[List[Tuple]], np.ndarray]:
+    """Roll every lane to termination; returns per-lane transition lists
+    (s, a, s2, done) and the episode returns."""
+    obs = venv.reset()
+    B = venv.batch
+    trajs: List[List[Tuple]] = [[] for _ in range(B)]
+    finals = np.zeros(B)
+    mats = obs["matrix"]
+    while not venv.dones.all():
+        acts = act_batch(mats)
+        live = ~venv.dones
+        nobs, r, dones, _ = venv.step(acts)
+        nmats = nobs["matrix"]
+        for i in np.flatnonzero(live):
+            trajs[i].append((mats[i], int(acts[i]), nmats[i], bool(dones[i])))
+            if dones[i]:
+                finals[i] = r[i]
+        mats = nmats
+    return trajs, finals
+
+
 def train_online_dqn(env: ProvisionEnv, learner: DQNLearner,
                      episodes: int = 30, replay_capacity: int = 2048,
-                     seed: int = 0) -> List[float]:
+                     seed: int = 0, batch: Optional[int] = None
+                     ) -> List[float]:
+    """Online training on batched rollouts: B episodes share one
+    background replay (VectorProvisionEnv) and one jitted forward per
+    lockstep decision point; the replay fill and per-episode training
+    cadence match the scalar loop."""
     buf = ReplayBuffer(replay_capacity, learner.fc.history, STATE_DIM, seed)
-    returns = []
-    for ep in range(episodes):
-        obs = env.reset()
-        traj = []
-        done, r, info = False, 0.0, {}
-        while not done:
-            a = learner.act(obs["matrix"], explore=True)
-            nobs, r, done, info = env.step(a)
-            traj.append((obs["matrix"], a, nobs["matrix"], done))
-            obs = nobs
-        # Eq. 8: the outcome reward credits every action of the episode
-        for (s, a, s2, d) in traj:
-            buf.add(s, a, r, s2, d)
-        returns.append(r)
-        if len(buf) >= learner.dc.batch_size:
-            for _ in range(4):
-                learner.train_on(buf.sample(learner.dc.batch_size))
+    returns: List[float] = []
+    B = batch or min(episodes, 8)
+    while len(returns) < episodes:
+        b = min(B, episodes - len(returns))
+        venv = VectorProvisionEnv(env.trace, env.cfg, b,
+                                  seed=seed + len(returns))
+        trajs, finals = _rollout_batch(
+            venv, lambda m: learner.act_batch(m, explore=True))
+        for i in range(b):
+            # Eq. 8: the outcome reward credits every action of the episode
+            for (s, a, s2, d) in trajs[i]:
+                buf.add(s, a, finals[i], s2, d)
+            returns.append(float(finals[i]))
+            if len(buf) >= learner.dc.batch_size:
+                for _ in range(4):
+                    learner.train_on(buf.sample(learner.dc.batch_size))
     return returns
 
 
 def train_online_pg(env: ProvisionEnv, learner: PGLearner,
-                    episodes: int = 30) -> List[float]:
-    returns = []
-    for ep in range(episodes):
-        obs = env.reset()
-        states, actions = [], []
-        done, r = False, 0.0
-        while not done:
-            a = learner.act(obs["matrix"], explore=True)
-            states.append(obs["matrix"])
-            actions.append(a)
-            obs, r, done, info = env.step(a)
-        learner.train_on_episode(np.stack(states), np.asarray(actions), r)
-        returns.append(r)
+                    episodes: int = 30, seed: int = 0,
+                    batch: Optional[int] = None) -> List[float]:
+    returns: List[float] = []
+    B = batch or min(episodes, 8)
+    while len(returns) < episodes:
+        b = min(B, episodes - len(returns))
+        venv = VectorProvisionEnv(env.trace, env.cfg, b,
+                                  seed=seed + len(returns))
+        trajs, finals = _rollout_batch(
+            venv, lambda m: learner.act_batch(m, explore=True))
+        for i in range(b):
+            states = np.stack([t[0] for t in trajs[i]])
+            actions = np.asarray([t[1] for t in trajs[i]], np.int64)
+            learner.train_on_episode(states, actions, float(finals[i]))
+            returns.append(float(finals[i]))
     return returns
 
 

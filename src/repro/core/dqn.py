@@ -80,6 +80,18 @@ class DQNLearner:
         q = self._q_fn(self.params, jnp.asarray(state_matrix[None]))
         return int(jnp.argmax(q[0]))
 
+    def act_batch(self, state_matrices: np.ndarray,
+                  explore: bool = True) -> np.ndarray:
+        """Vectorized policy over a (B, k, 40) stack -> (B,) actions.
+        One jitted forward serves the whole batch (the vector-env path)."""
+        q = np.asarray(self._q_fn(self.params, jnp.asarray(state_matrices)))
+        a = np.argmax(q, axis=-1)
+        if explore:
+            b = len(a)
+            flip = self.rng.random(b) < self.dc.epsilon
+            a = np.where(flip, self.rng.integers(0, 2, b), a)
+        return a.astype(np.int64)
+
     # ----------------------------------------------------------- learning
     def train_on(self, batch: Dict[str, np.ndarray]) -> float:
         jb = {k: jnp.asarray(v) for k, v in batch.items()}

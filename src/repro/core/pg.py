@@ -70,6 +70,16 @@ class PGLearner:
             return int(self.rng.choice(2, p=p))
         return int(np.argmax(p))
 
+    def act_batch(self, state_matrices: np.ndarray,
+                  explore: bool = True) -> np.ndarray:
+        """Vectorized sampling over a (B, k, 40) stack -> (B,) actions."""
+        logits = self._logits_fn(self.params, jnp.asarray(state_matrices))
+        p = np.asarray(jax.nn.softmax(logits, -1))
+        if explore:
+            u = self.rng.random(len(p))
+            return (u < p[:, 1]).astype(np.int64)
+        return np.argmax(p, axis=-1).astype(np.int64)
+
     # ----------------------------------------------------------- learning
     def train_on_episode(self, states: np.ndarray, actions: np.ndarray,
                          episode_return: float, pad_to: int = 32) -> float:

@@ -15,6 +15,16 @@ If the agent never submits before the predecessor's limit expires, the
 environment falls back to reactive submission (the paper's ε-greedy
 online training prevents the infinite-episode case; the fallback bounds
 it in evaluation too).
+
+Batched rollouts: ``VectorProvisionEnv`` steps B independent episodes in
+lockstep and returns stacked (B, k, 40) state matrices. Its ``reset``
+replays the background trace ONCE and forks the simulator at each
+episode's warm-up point (``SlurmSimulator.fork``), so the dominant
+per-episode cost — weeks of simulated background load — is paid once per
+batch instead of once per episode. Lane ``i`` is bit-identical to a
+scalar ``ProvisionEnv`` seeded ``seed + i``: the fork point is exactly
+the instant a scalar reset would have replayed to, and the event engine
+is deterministic, so forked state == fresh-replay state.
 """
 from __future__ import annotations
 
@@ -100,17 +110,26 @@ class ProvisionEnv:
         }
 
     # ------------------------------------------------------------ episode
+    def warmup_point(self, t0: float) -> float:
+        """The instant an episode's history window begins (fork point)."""
+        return max(t0 - self.cfg.history * self.cfg.interval, 0.0)
+
     def reset(self, t_start: Optional[float] = None) -> Dict:
         lo, hi = self._t_start_range
         t0 = t_start if t_start is not None else float(self.rng.uniform(lo, hi))
-        self.sim = SlurmSimulator(self.cfg.n_nodes, mode="fast")
-        self.sim.load([copy.copy(j) for j in self.trace])
+        sim = SlurmSimulator(self.cfg.n_nodes, mode="fast")
+        sim.load([copy.copy(j) for j in self.trace])
+        return self._begin_episode(sim, t0)
+
+    def _begin_episode(self, sim: SlurmSimulator, t0: float) -> Dict:
+        """Start an episode at t0 on ``sim`` (fresh, or forked at/before
+        the warm-up point — identical state either way)."""
+        self.sim = sim
         self.hist = StateHistory(self.cfg.history)
         self.pred = None
         self.succ = None
-        # warm up: run to t0 - 24h silently, then fill the history window
-        hist_span = self.cfg.history * self.cfg.interval
-        self.sim.run_until(max(t0 - hist_span, 0.0))
+        # warm up: run to the history-window start, then fill the window
+        self.sim.run_until(self.warmup_point(t0))
         self.hist.push(self._snapshot())
         self._advance(max(t0 - self.sim.now, 0.0))
         # submit + start the predecessor
@@ -151,35 +170,131 @@ class ProvisionEnv:
         return self.obs(), r, True, info
 
 
+class VectorProvisionEnv:
+    """B ProvisionEnv episodes stepped in lockstep (batch-first API).
+
+    ``reset()`` -> obs dict with "matrix" (B, k, 40), "summary" (B, 4m),
+    "pred_remaining" (B,), "time_pos" (B,).
+    ``step(actions)`` -> (obs, rewards (B,), dones (B,), infos list).
+
+    Lanes that finish stay frozen (done=True, reward 0) until the next
+    reset. Lane i reproduces a scalar ProvisionEnv seeded ``seed + i``
+    exactly; the speedup comes from replaying the shared background
+    trace once per batch and forking the simulator at each episode's
+    warm-up point.
+    """
+
+    def __init__(self, trace: Sequence[Job], cfg: EnvConfig, batch: int,
+                 seed: int = 0):
+        assert batch >= 1
+        self.trace = trace
+        self.cfg = cfg
+        self.batch = batch
+        self.envs = [ProvisionEnv(trace, cfg, seed=seed + i)
+                     for i in range(batch)]
+        self.dones = np.ones(batch, bool)      # not yet reset
+        self._obs: List[Dict] = [{}] * batch
+
+    # ------------------------------------------------------------ helpers
+    def _stack(self) -> Dict:
+        o = self._obs
+        return {
+            "matrix": np.stack([x["matrix"] for x in o]),
+            "summary": np.stack([x["summary"] for x in o]),
+            "pred_remaining": np.array([x["pred_remaining"] for x in o],
+                                       np.float64),
+            "time_pos": np.array([x["time_pos"] for x in o], np.float64),
+        }
+
+    @property
+    def _t_start_range(self) -> Tuple[float, float]:
+        return self.envs[0]._t_start_range
+
+    # ------------------------------------------------------------ episode
+    def reset(self, t_starts: Optional[Sequence[float]] = None) -> Dict:
+        lo, hi = self._t_start_range
+        t0s = [float(t_starts[i]) if t_starts is not None
+               else float(env.rng.uniform(lo, hi))
+               for i, env in enumerate(self.envs)]
+        # one background replay, forked at each lane's warm-up point
+        base = SlurmSimulator(self.cfg.n_nodes, mode="fast")
+        base.load([copy.copy(j) for j in self.trace])
+        order = np.argsort([self.envs[i].warmup_point(t0s[i])
+                            for i in range(self.batch)], kind="stable")
+        for i in order:
+            i = int(i)
+            base.run_until(self.envs[i].warmup_point(t0s[i]))
+            self._obs[i] = self.envs[i]._begin_episode(base.fork(), t0s[i])
+        self.dones = np.zeros(self.batch, bool)
+        return self._stack()
+
+    def step(self, actions: Sequence[int]
+             ) -> Tuple[Dict, np.ndarray, np.ndarray, List[Dict]]:
+        rewards = np.zeros(self.batch)
+        infos: List[Dict] = [{} for _ in range(self.batch)]
+        for i, env in enumerate(self.envs):
+            if self.dones[i]:
+                continue
+            o, r, d, info = env.step(int(actions[i]))
+            self._obs[i] = o
+            rewards[i] = r
+            infos[i] = info
+            self.dones[i] = d
+        return self._stack(), rewards, self.dones.copy(), infos
+
+
 # ------------------------------------------------------- offline sampling
 def collect_offline_samples(env: ProvisionEnv, n_episodes: int,
-                            n_points: int = 7, seed: int = 0
-                            ) -> List[Dict]:
+                            n_points: int = 7, seed: int = 0,
+                            batch: Optional[int] = None) -> List[Dict]:
     """§4.9.1(a): per episode, probe ``n_points`` evenly spaced submission
     instants between warm-up and the predecessor's end; record
-    (state matrix, summary, observed reward, outcome)."""
+    (state matrix, summary, observed reward, outcome).
+
+    Probes run on a VectorProvisionEnv: all points of one episode share a
+    start instant, so they fork from the same background state and the
+    whole (episode x point) grid rolls out in lockstep batches.
+    """
     rng = np.random.default_rng(seed)
-    samples: List[Dict] = []
-    for ep in range(n_episodes):
-        t0 = float(rng.uniform(*env._t_start_range))
-        for p in range(n_points):
-            frac = (p + 0.5) / n_points
-            obs = env.reset(t_start=t0)
-            # fast-forward to the probe instant, then submit there
-            target = env.pred.start_time + frac * env.cfg.sub_limit
-            done, info, r = False, {}, 0.0
-            while env.sim.now + env.cfg.interval < target and not done:
-                obs, r, done, info = env.step(0)
-            state_at_submit = obs["matrix"]
-            tp = obs["time_pos"]
-            if not done:
-                _, r, done, info = env.step(1)
-            samples.append({
-                "matrix": state_at_submit,
-                "summary": summary_features(state_at_submit),
-                "reward": r,
-                "kind": info.get("kind", ""),
-                "wait_s": info.get("wait_s", 0.0),
-                "time_pos": tp,
-            })
-    return samples
+    lo, hi = env._t_start_range
+    ep_t0 = [float(rng.uniform(lo, hi)) for _ in range(n_episodes)]
+    lanes = [(ep, p) for ep in range(n_episodes) for p in range(n_points)]
+    out: List[Optional[Dict]] = [None] * len(lanes)
+    B = batch or min(len(lanes), 32)
+    for c0 in range(0, len(lanes), B):
+        chunk = lanes[c0:c0 + B]
+        venv = VectorProvisionEnv(env.trace, env.cfg, len(chunk),
+                                  seed=seed + c0)
+        obs = venv.reset(t_starts=[ep_t0[ep] for ep, _ in chunk])
+        targets = [venv.envs[i].pred.start_time
+                   + ((p + 0.5) / n_points) * env.cfg.sub_limit
+                   for i, (_, p) in enumerate(chunk)]
+        # per lane: the observation after the last wait step feeds the
+        # sample; the reward comes from the (possibly forced) submission
+        mats = [obs["matrix"][i] for i in range(len(chunk))]
+        tps = [float(obs["time_pos"][i]) for i in range(len(chunk))]
+        while not venv.dones.all():
+            acts = []
+            for i, e in enumerate(venv.envs):
+                wait = (not venv.dones[i]
+                        and e.sim.now + e.cfg.interval < targets[i])
+                acts.append(0 if wait else 1)
+            was_done = venv.dones.copy()
+            nobs, r, dones, infos = venv.step(acts)
+            for i, (ep, p) in enumerate(chunk):
+                if was_done[i]:
+                    continue
+                if dones[i]:
+                    m = mats[i]
+                    out[c0 + i] = {
+                        "matrix": m,
+                        "summary": summary_features(m),
+                        "reward": float(r[i]),
+                        "kind": infos[i].get("kind", ""),
+                        "wait_s": infos[i].get("wait_s", 0.0),
+                        "time_pos": tps[i],
+                    }
+                else:       # still waiting: roll the pre-submit obs
+                    mats[i] = nobs["matrix"][i]
+                    tps[i] = float(nobs["time_pos"][i])
+    return [s for s in out if s is not None]

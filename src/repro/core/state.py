@@ -16,11 +16,17 @@ Variable map (paper §4.1):
 All features are normalized (sizes by cluster nodes, times by the 48 h
 limit, counts by /100) so one trained network transfers across clusters
 only in *shape* — per the paper, models must be trained per cluster.
+
+Batch-first building blocks (``StateHistoryBatch``, ``encode_snapshots``)
+carry the same encoding for B lockstep episodes, producing (B, k, 40)
+state stacks. ``VectorProvisionEnv`` currently stacks per-lane scalar
+encodings (the lanes advance through warm-up asynchronously); moving its
+observation path onto these batch classes is a ROADMAP open item.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -29,12 +35,24 @@ STATE_DIM = 40
 DEFAULT_HISTORY = 144          # 24h at 10-min sampling
 SAMPLE_INTERVAL = 600.0        # 10 minutes
 
+_QFRAC = np.array([0.0, 0.25, 0.5, 0.75, 1.0])
 
-def _pcts(vals: List[float], scale: float) -> np.ndarray:
-    if not vals:
+
+def _pcts(vals, scale: float) -> np.ndarray:
+    """p0/p25/p50/p75/p100 via direct sort + linear interpolation —
+    numerically identical to np.percentile's default method, without its
+    per-call dispatch overhead (this runs per snapshot on the rollout
+    hot path)."""
+    v = np.asarray(vals, np.float64)
+    if v.size == 0:
         return np.zeros(5, np.float32)
-    return (np.percentile(np.asarray(vals, np.float64),
-                          [0, 25, 50, 75, 100]) / scale).astype(np.float32)
+    v = np.sort(v)
+    q = (v.size - 1) * _QFRAC
+    lo = q.astype(np.int64)
+    hi = np.minimum(lo + 1, v.size - 1)
+    frac = q - lo
+    out = v[lo] * (1.0 - frac) + v[hi] * frac
+    return (out / scale).astype(np.float32)
 
 
 def encode_snapshot(sample: Dict, n_nodes: int, limit: float,
@@ -47,11 +65,11 @@ def encode_snapshot(sample: Dict, n_nodes: int, limit: float,
     v[6:11] = _pcts(sample["queued_ages"], limit)
     v[11:16] = _pcts(sample["queued_limits"], limit)
     v[16] = sample["n_running"] / 100.0
-    rs = sample["running_sizes"]
+    rs = np.asarray(sample["running_sizes"], np.float64)
     v[17:22] = _pcts(rs, n_nodes)
-    if rs:
-        v[22] = float(np.mean(rs)) / n_nodes
-        v[23] = float(np.std(rs)) / n_nodes
+    if rs.size:
+        v[22] = float(rs.mean()) / n_nodes
+        v[23] = float(rs.std()) / n_nodes
     v[24:29] = _pcts(sample["running_elapsed"], limit)
     v[29:34] = _pcts(sample["running_limits"], limit)
     if pred:
@@ -65,24 +83,94 @@ def encode_snapshot(sample: Dict, n_nodes: int, limit: float,
     return v
 
 
+def encode_snapshots(samples: Sequence[Dict], n_nodes: int, limit: float,
+                     preds: Optional[Sequence[Optional[Dict]]] = None,
+                     succs: Optional[Sequence[Optional[Dict]]] = None
+                     ) -> np.ndarray:
+    """Batched snapshot encoding -> (B, 40) float32.
+
+    Per-lane value populations are ragged (different queue/running
+    lengths), so the percentile scans run per lane; the batch dimension
+    exists to keep the vector-env API allocation-free at the call site.
+    """
+    B = len(samples)
+    out = np.empty((B, STATE_DIM), np.float32)
+    for b in range(B):
+        out[b] = encode_snapshot(samples[b], n_nodes, limit,
+                                 preds[b] if preds is not None else None,
+                                 succs[b] if succs is not None else None)
+    return out
+
+
 @dataclasses.dataclass
 class StateHistory:
-    """Ring buffer of snapshot vectors -> the (k, 40) state matrix."""
+    """Ring buffer of snapshot vectors -> the (k, 40) state matrix.
+
+    Index-based ring: ``push`` is an O(d) row write (no O(k*d) roll);
+    ``matrix`` materializes the oldest-first view on demand.
+    """
     k: int = DEFAULT_HISTORY
     _buf: Optional[np.ndarray] = None
+    _pos: int = 0
     _n: int = 0
 
     def __post_init__(self):
         self._buf = np.zeros((self.k, STATE_DIM), np.float32)
 
     def push(self, v: np.ndarray) -> None:
-        self._buf = np.roll(self._buf, -1, axis=0)
-        self._buf[-1] = v
+        self._buf[self._pos] = v
+        self._pos = (self._pos + 1) % self.k
         self._n = min(self._n + 1, self.k)
 
     def matrix(self) -> np.ndarray:
         """(k, 40): oldest row first; zero-padded during warm-up."""
-        return self._buf.copy()
+        if self._pos == 0:
+            return self._buf.copy()
+        return np.concatenate([self._buf[self._pos:], self._buf[:self._pos]])
+
+    @property
+    def filled(self) -> int:
+        return self._n
+
+
+@dataclasses.dataclass
+class StateHistoryBatch:
+    """B lockstep ring buffers -> the (B, k, 40) state-matrix stack.
+
+    One shared write cursor: lanes advance together (the vector env steps
+    them in lockstep), so a push writes one (B, 40) slab in place.
+    """
+    batch: int
+    k: int = DEFAULT_HISTORY
+    _buf: Optional[np.ndarray] = None
+    _pos: int = 0
+    _n: int = 0
+
+    def __post_init__(self):
+        self._buf = np.zeros((self.batch, self.k, STATE_DIM), np.float32)
+
+    def push(self, v: np.ndarray, lanes: Optional[np.ndarray] = None) -> None:
+        """v: (B, 40) slab — or (n_lanes, 40) with ``lanes`` indices."""
+        if lanes is None:
+            self._buf[:, self._pos] = v
+        else:
+            self._buf[lanes, self._pos] = v
+        self._pos = (self._pos + 1) % self.k
+        self._n = min(self._n + 1, self.k)
+
+    def matrix(self) -> np.ndarray:
+        """(B, k, 40): oldest row first per lane."""
+        if self._pos == 0:
+            return self._buf.copy()
+        return np.concatenate([self._buf[:, self._pos:],
+                               self._buf[:, :self._pos]], axis=1)
+
+    def lane(self, b: int) -> np.ndarray:
+        """(k, 40) view for one lane (oldest row first)."""
+        if self._pos == 0:
+            return self._buf[b].copy()
+        return np.concatenate([self._buf[b, self._pos:],
+                               self._buf[b, :self._pos]])
 
     @property
     def filled(self) -> int:

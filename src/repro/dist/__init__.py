@@ -1,0 +1,2 @@
+"""Distribution: sharding rules and activation-layout constraints."""
+from . import sharding  # noqa: F401

@@ -1,0 +1,7 @@
+"""Pallas-TPU API compatibility: jax renamed TPUCompilerParams to
+CompilerParams; kernels import the alias from here so the next rename is
+a one-line fix."""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams

@@ -5,20 +5,31 @@ Two modes sharing one scheduling core:
 * ``fast``  (default) — event-driven: the schedule is re-evaluated only when
   something can change (submission, completion). This is the simulator the
   RL agent trains against (paper: ~1 simulated month / wall-clock minute —
-  ours is far under that, see benchmarks/bench_sim_overhead.py).
+  ours is far under that, see benchmarks/bench_simulator.py).
 * ``exact`` — polls the scheduler on a fixed interval with age-recomputed
   priorities, mimicking production Slurm's sched/backfill cycle (the role
   the "standard Slurm simulator" [3,44] plays in the paper's fidelity
-  study). benchmarks/bench_sim_fidelity.py reproduces the §5.2 comparison:
+  study). benchmarks/bench_simulator.py reproduces the §5.2 comparison:
   makespan diff <2.5%, JCT geomean diff <15%, 3-26x overhead.
 
+The scheduling core is a structure-of-arrays engine: per-job submit /
+runtime / limit / nodes / start / end live in numpy arrays, priorities are
+computed and ordered with vectorized argsort, and the EASY-backfill
+reservation scan is a cumulative sum over running jobs' limit-ends. `Job`
+dataclasses exist only at the API boundary (``load``/``submit``/
+``finished``); start/end times are written back to them as they happen.
+
+The array layout also makes episode forking cheap: ``fork()`` snapshots
+the whole scheduler state with a handful of numpy copies, which is what
+``repro.core.VectorProvisionEnv`` uses to share one background-trace
+warm-up across a batch of RL episodes.
+
 API (§5.1): ``submit()``, ``step()``, ``sample()`` + ``run_until`` /
-``run_to_completion`` conveniences.
+``run_to_completion`` / ``run_until_started`` conveniences.
 """
 from __future__ import annotations
 
 import dataclasses
-import heapq
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -31,13 +42,8 @@ AGE_WEIGHT = 1000.0
 AGE_MAX = 7 * 24 * 3600.0
 SIZE_WEIGHT = 100.0
 
-
-@dataclasses.dataclass(order=True)
-class _Event:
-    time: float
-    seq: int
-    kind: str = dataclasses.field(compare=False)   # "submit" | "complete"
-    job: Job = dataclasses.field(compare=False)
+_INF = float("inf")
+_EMPTY_I = np.empty(0, np.int64)
 
 
 class SlurmSimulator:
@@ -49,28 +55,92 @@ class SlurmSimulator:
         self.sched_interval = sched_interval
         self.backfill = backfill
         self.now = 0.0
-        self._events: List[_Event] = []
-        self._seq = 0
-        self.queue: List[Job] = []
-        self.running: Dict[int, Job] = {}
-        self.finished: List[Job] = []
         self._next_sched = 0.0
         self._sched_passes = 0
+        # --- structure-of-arrays job store -------------------------------
+        cap = 64
+        self._cap = cap
+        self._n = 0
+        self._sub = np.zeros(cap)            # submit time
+        self._rt = np.zeros(cap)             # actual runtime
+        self._lim = np.zeros(cap)            # wall-clock limit
+        self._nn = np.zeros(cap, np.int64)   # node count
+        self._ids = np.zeros(cap, np.int64)  # external job_id (tie-break)
+        self._start = np.full(cap, -1.0)
+        self._end = np.full(cap, -1.0)
+        self._jobs: List[Job] = []           # aligned Job refs (API boundary)
+        self._by_id: Dict[int, int] = {}     # job_id -> index (last wins)
+        # pending arrivals: sorted by time (stable); _arr_ptr = next arrival
+        self._arr_t = np.empty(0)
+        self._arr_i = _EMPTY_I
+        self._arr_ptr = 0
+        # queue of waiting job indices (priority order as of last schedule)
+        self._q = _EMPTY_I
+        # running set (parallel arrays, compacted on completion)
+        self._run_i = np.zeros(cap, np.int64)
+        self._run_end = np.zeros(cap)
+        self._run_n = 0
+        self._next_comp = _INF               # cached min over _run_end
+        # finished job indices, completion order
+        self._fin: List[int] = []
+        self._makespan = 0.0
+        # forked sims only write Job attrs for jobs submitted post-fork
+        self._forked = False
+        self._tracked: set = set()
 
     # ------------------------------------------------------------- loading
-    def load(self, jobs: Sequence[Job]) -> None:
-        for j in jobs:
-            self._push(j.submit_time, "submit", j)
+    def _register(self, job: Job) -> int:
+        i = self._n
+        if i == self._cap:
+            self._grow(max(2 * self._cap, i + 1))
+        self._sub[i] = job.submit_time
+        self._rt[i] = job.runtime
+        self._lim[i] = job.time_limit
+        self._nn[i] = job.n_nodes
+        self._ids[i] = job.job_id
+        self._start[i] = -1.0
+        self._end[i] = -1.0
+        self._jobs.append(job)
+        self._by_id[int(job.job_id)] = i
+        self._n = i + 1
+        return i
 
-    def _push(self, t: float, kind: str, job: Job) -> None:
-        self._seq += 1
-        heapq.heappush(self._events, _Event(t, self._seq, kind, job))
+    def _grow(self, cap: int) -> None:
+        def pad(a, fill=0.0):
+            out = np.full(cap, fill, a.dtype)
+            out[:len(a)] = a
+            return out
+        self._sub, self._rt, self._lim = (pad(self._sub), pad(self._rt),
+                                          pad(self._lim))
+        self._nn, self._ids = pad(self._nn), pad(self._ids)
+        self._start, self._end = pad(self._start, -1.0), pad(self._end, -1.0)
+        self._cap = cap
+
+    def load(self, jobs: Sequence[Job]) -> None:
+        """Register a batch of future arrivals (typically the whole trace)."""
+        idx = np.array([self._register(j) for j in jobs], np.int64)
+        t = self._sub[idx]
+        # merge with any not-yet-processed arrivals; stable sort keeps
+        # equal-time arrivals in insertion order (heap-seq semantics)
+        pend_t = np.concatenate([self._arr_t[self._arr_ptr:], t])
+        pend_i = np.concatenate([self._arr_i[self._arr_ptr:], idx])
+        order = np.argsort(pend_t, kind="stable")
+        self._arr_t, self._arr_i, self._arr_ptr = (pend_t[order],
+                                                   pend_i[order], 0)
 
     # ------------------------------------------------------------ user API
     def submit(self, job: Job) -> None:
         """Submit a job at the current simulation time."""
         job.submit_time = max(job.submit_time, self.now)
-        self._push(job.submit_time, "submit", job)
+        i = self._register(job)
+        self._tracked.add(i)
+        # insert after any equal-time arrivals (matches event-seq order)
+        pos = int(np.searchsorted(self._arr_t[self._arr_ptr:],
+                                  job.submit_time, side="right"))
+        self._arr_t = np.insert(self._arr_t[self._arr_ptr:], pos,
+                                job.submit_time)
+        self._arr_i = np.insert(self._arr_i[self._arr_ptr:], pos, i)
+        self._arr_ptr = 0
 
     def step(self, dt: float) -> None:
         """Advance simulated time by dt, processing all events."""
@@ -78,145 +148,313 @@ class SlurmSimulator:
 
     def sample(self) -> Dict:
         """Snapshot of queue and server state (the provisioner's raw input)."""
-        qs = self.queue
-        rj = list(self.running.values())
+        q = self._q
+        r = self._run_i[:self._run_n]
         return {
             "time": self.now,
-            "n_queued": len(qs),
-            "queued_sizes": [j.n_nodes for j in qs],
-            "queued_ages": [self.now - j.submit_time for j in qs],
-            "queued_limits": [j.time_limit for j in qs],
-            "n_running": len(rj),
-            "running_sizes": [j.n_nodes for j in rj],
-            "running_elapsed": [self.now - j.start_time for j in rj],
-            "running_limits": [j.time_limit for j in rj],
+            "n_queued": int(q.size),
+            "queued_sizes": self._nn[q],
+            "queued_ages": self.now - self._sub[q],
+            "queued_limits": self._lim[q],
+            "n_running": int(self._run_n),
+            "running_sizes": self._nn[r],
+            "running_elapsed": self.now - self._start[r],
+            "running_limits": self._lim[r],
             "n_free_nodes": self.cluster.n_free,
             "utilization": self.cluster.utilization(),
         }
 
     # ---------------------------------------------------------- event loop
-    def run_until(self, t: float) -> None:
-        while self._events and self._events[0].time <= t:
-            if self.mode == "exact" and self._next_sched < self._events[0].time:
+    def _next_arrival(self) -> float:
+        return (self._arr_t[self._arr_ptr] if self._arr_ptr < self._arr_t.size
+                else _INF)
+
+    def _next_completion(self) -> float:
+        return self._next_comp
+
+    def _next_event_time(self) -> float:
+        return min(self._next_arrival(), self._next_completion())
+
+    def _absorb_events(self, t: float) -> None:
+        """Process every arrival/completion with time <= t (no scheduling)."""
+        # arrivals -> queue (append; order fixed by the next schedule pass)
+        p = self._arr_ptr
+        e = int(np.searchsorted(self._arr_t, t, side="right"))
+        if e > p:
+            self._q = np.concatenate([self._q, self._arr_i[p:e]])
+            self._arr_ptr = e
+        # completions -> release nodes
+        rn = self._run_n
+        if rn and self._next_comp <= t:
+            done = self._run_end[:rn] <= t
+            ids = self._run_i[:rn][done]
+            self.cluster.release_n(int(self._nn[ids].sum()))
+            keep = ~done
+            nk = int(keep.sum())
+            self._run_i[:nk] = self._run_i[:rn][keep]
+            self._run_end[:nk] = self._run_end[:rn][keep]
+            self._run_n = nk
+            self._next_comp = (float(self._run_end[:nk].min()) if nk
+                               else _INF)
+            self._fin.extend(ids.tolist())
+            mk = float(self._end[ids].max())
+            if mk > self._makespan:
+                self._makespan = mk
+
+    def run_until(self, t: float, _stop_idx: Optional[int] = None) -> None:
+        """Advance to time t, processing events (and polls in exact mode).
+
+        Monotonic: a target in the past is clamped to the current time, so
+        simulated time never moves backward. With ``_stop_idx`` the loop
+        returns as soon as that job starts (time rests at the start
+        event), or — in fast mode — as soon as the event horizon empties,
+        since nothing could start it anymore.
+        """
+        t = max(t, self.now)
+        exact = self.mode == "exact"
+        while True:
+            tn = self._next_event_time()
+            if exact and self._next_sched <= t and self._next_sched < tn:
                 self.now = self._next_sched
                 self._schedule()
                 self._next_sched += self.sched_interval
+                if _stop_idx is not None and self._start[_stop_idx] >= 0:
+                    return
                 continue
-            ev = heapq.heappop(self._events)
-            self.now = ev.time
-            if ev.kind == "submit":
-                self.queue.append(ev.job)
-            else:  # complete
-                self.cluster.release(ev.job.job_id)
-                self.running.pop(ev.job.job_id, None)
-                self.finished.append(ev.job)
-            if self.mode == "fast":
+            if tn > t:
+                break
+            if _stop_idx is not None and tn == _INF and not exact:
+                return
+            self.now = tn
+            self._absorb_events(tn)
+            if not exact:
                 self._schedule()
-        if self.mode == "exact":
-            while self._next_sched <= t:
-                self.now = self._next_sched
-                self._schedule()
-                self._next_sched += self.sched_interval
+            if _stop_idx is not None and self._start[_stop_idx] >= 0:
+                return
         self.now = t
 
     def run_to_completion(self) -> None:
-        while self._events or self.queue:
-            if self._events:
-                self.run_until(self._events[0].time)
-            elif self.queue:
-                # exact mode: wait for the next scheduling poll
-                self.run_until(self._next_sched + self.sched_interval)
-        # drain remaining completions
-        if self._events:
-            self.run_until(self._events[-1].time)
+        """Drain every pending event; leaves nothing in flight.
+
+        Jobs that can never start (e.g. oversized requests) are left in the
+        queue rather than spinning forever: once no events remain and a
+        scheduling pass makes no progress, the remainder is unstartable.
+        """
+        while True:
+            tn = self._next_event_time()
+            if tn < _INF:
+                self.run_until(tn)
+                continue
+            if not self._q.size or self.mode == "fast":
+                break
+            # exact mode: queued jobs wait for the next scheduling poll
+            nq = self._q.size
+            self.run_until(max(self._next_sched,
+                               self.now + self.sched_interval))
+            if self._next_event_time() == _INF and self._q.size == nq:
+                break        # poll made no progress and nothing will change
 
     def run_until_started(self, job: Job, hard_limit: float = 400 * 24 * 3600.0
                           ) -> float:
-        """Advance until `job` starts; returns its queue wait time."""
-        t0 = self.now
-        while job.start_time < 0 and self.now - t0 < hard_limit:
-            if not self._events and self.mode == "fast":
-                break
-            nxt = self._events[0].time if self._events else self._next_sched
-            self.run_until(max(nxt, self.now))
-        return job.wait_time if job.start_time >= 0 else float("inf")
+        """Advance until `job` starts; returns its queue wait time.
+
+        One bounded ``run_until`` with a start-stop flag: the event loop
+        advances monotonically through events/polls and halts at the event
+        that starts the job, so it always terminates — either the job
+        starts or ``hard_limit`` of simulated time elapses (returns inf,
+        with ``now`` advanced, never spinning in place).
+        """
+        idx = self._by_id.get(int(job.job_id))
+        if idx is None:
+            return job.wait_time if job.start_time >= 0 else float("inf")
+        if self._start[idx] < 0:
+            self.run_until(self.now + hard_limit, _stop_idx=idx)
+        if self._start[idx] >= 0:
+            return float(self._start[idx] - self._sub[idx])
+        return float("inf")
 
     # ------------------------------------------------------------ scheduler
-    def _priority(self, j: Job) -> float:
-        age = min((self.now - j.submit_time) / AGE_MAX, 1.0)
-        size = j.n_nodes / max(self.cluster.n_available, 1)
-        return AGE_WEIGHT * age + SIZE_WEIGHT * size
-
-    def _start(self, j: Job) -> None:
-        self.cluster.allocate(j.job_id, j.n_nodes)
-        j.start_time = self.now
-        j.end_time = self.now + min(j.runtime, j.time_limit)
-        self.running[j.job_id] = j
-        self._push(j.end_time, "complete", j)
+    def _start_batch(self, ids: np.ndarray) -> None:
+        total = int(self._nn[ids].sum())
+        if total > self.cluster.n_free:
+            raise RuntimeError(f"allocation overflow: want {total}, "
+                               f"free {self.cluster.n_free}")
+        self.cluster.allocate_n(total)
+        now = self.now
+        ends = now + np.minimum(self._rt[ids], self._lim[ids])
+        self._start[ids] = now
+        self._end[ids] = ends
+        rn = self._run_n
+        need = rn + ids.size
+        if need > self._run_i.size:
+            cap = max(2 * self._run_i.size, need)
+            self._run_i = np.resize(self._run_i, cap)
+            self._run_end = np.resize(self._run_end, cap)
+        self._run_i[rn:need] = ids
+        self._run_end[rn:need] = ends
+        self._run_n = need
+        mn = float(ends.min())
+        if mn < self._next_comp:
+            self._next_comp = mn
+        # write back to the boundary Job objects (forked sims only touch
+        # jobs submitted after the fork -- shared trace refs stay pristine)
+        jobs, tracked = self._jobs, self._tracked
+        for k, i in enumerate(ids):
+            i = int(i)
+            if not self._forked or i in tracked:
+                j = jobs[i]
+                j.start_time = now
+                j.end_time = float(ends[k])
 
     def _schedule(self) -> None:
         """Priority order + EASY backfill with one head-of-line reservation."""
         self._sched_passes += 1
-        if not self.queue:
+        q = self._q
+        if not q.size:
             return
-        self.queue.sort(key=lambda j: (-self._priority(j), j.submit_time, j.job_id))
-        free = self.cluster.n_free
-        started: List[int] = []
-        i = 0
+        # nothing can start with zero free nodes; the queue order is
+        # recomputed on every pass, so skipping the sort here is safe
+        if self.cluster.n_free == 0:
+            return
+        # vectorized multifactor priority, ordered by (-prio, submit, id)
+        age = np.minimum((self.now - self._sub[q]) / AGE_MAX, 1.0)
+        size = self._nn[q] / max(self.cluster.n_available, 1)
+        prio = AGE_WEIGHT * age + SIZE_WEIGHT * size
+        q = q[np.lexsort((self._ids[q], self._sub[q], -prio))]
         # start in priority order until the head doesn't fit
-        while i < len(self.queue):
-            j = self.queue[i]
-            if j.n_nodes <= free:
-                self._start(j)
-                free -= j.n_nodes
-                started.append(i)
-                i += 1
-            else:
-                break
-        for idx in reversed(started):
-            self.queue.pop(idx)
-        if not self.queue or not self.backfill:
+        free = self.cluster.n_free
+        csum = np.cumsum(self._nn[q])
+        k = int(np.searchsorted(csum, free, side="right"))
+        if k:
+            self._start_batch(q[:k])
+            q = q[k:]
+        if not q.size or not self.backfill:
+            self._q = q
             return
         # reservation for the blocked head based on running jobs' LIMITS
-        head = self.queue[0]
-        ends = sorted((r.start_time + r.time_limit, r.n_nodes)
-                      for r in self.running.values())
-        avail = self.cluster.n_free
-        shadow_time = float("inf")
-        spare_at_shadow = 0
-        for t_end, n in ends:
-            avail += n
-            if avail >= head.n_nodes:
-                shadow_time = t_end
-                spare_at_shadow = avail - head.n_nodes
-                break
-        # backfill the rest: must fit now AND not delay the reservation
+        head_n = int(self._nn[q[0]])
         free = self.cluster.n_free
-        kept: List[Job] = [head]
-        for j in self.queue[1:]:
-            fits = j.n_nodes <= free
-            ok_time = (self.now + j.time_limit <= shadow_time
-                       or j.n_nodes <= spare_at_shadow)
-            if fits and ok_time:
-                self._start(j)
-                free -= j.n_nodes
-                if j.n_nodes > spare_at_shadow:
-                    pass
-                else:
-                    spare_at_shadow -= j.n_nodes
-            else:
-                kept.append(j)
-        self.queue = kept
+        rn = self._run_n
+        run = self._run_i[:rn]
+        run_nn = self._nn[run]
+        order = np.lexsort((run_nn, self._start[run] + self._lim[run]))
+        avail = free + np.cumsum(run_nn[order])
+        pos = int(np.searchsorted(avail, head_n, side="left"))
+        if pos < rn:
+            r = run[order[pos]]
+            shadow_time = float(self._start[r] + self._lim[r])
+            spare = int(avail[pos]) - head_n
+        else:
+            shadow_time = _INF
+            spare = 0
+        # backfill the rest: must fit now AND not delay the reservation.
+        # A job is charged against the head's spare nodes only if it can
+        # outlive the reservation; jobs ending by shadow_time are free.
+        # The sequential scan only visits candidates that pass the
+        # vectorized fit/time pre-filter, and stops once nodes run out.
+        cand = q[1:]
+        n = self._nn[cand]
+        ends_ok = self.now + self._lim[cand] <= shadow_time
+        viable = np.flatnonzero((n <= free) & (ends_ok | (n <= spare)))
+        if not viable.size:
+            self._q = q
+            return
+        started_mask = np.zeros(cand.size, bool)
+        for k in viable:
+            nk = int(n[k])
+            if nk > free:
+                continue
+            if ends_ok[k]:
+                started_mask[k] = True
+                free -= nk
+            elif nk <= spare:
+                started_mask[k] = True
+                free -= nk
+                spare -= nk
+            if free == 0:
+                break
+        if started_mask.any():
+            self._start_batch(cand[started_mask])
+            self._q = np.concatenate([q[:1], cand[~started_mask]])
+        else:
+            self._q = q
+
+    # --------------------------------------------------- boundary views
+    def _job_view(self, i: int) -> Job:
+        j = self._jobs[i]
+        if self._forked and i not in self._tracked:
+            # shared trace ref: materialize a copy with this lane's truth
+            return dataclasses.replace(j, start_time=float(self._start[i]),
+                                       end_time=float(self._end[i]))
+        return j
+
+    @property
+    def queue(self) -> List[Job]:
+        return [self._job_view(int(i)) for i in self._q]
+
+    @property
+    def running(self) -> Dict[int, Job]:
+        r = self._run_i[:self._run_n]
+        return {int(self._ids[i]): self._job_view(int(i)) for i in r}
+
+    @property
+    def finished(self) -> List[Job]:
+        return [self._job_view(i) for i in self._fin]
+
+    @property
+    def _events(self) -> Tuple[float, ...]:
+        """Pending-event view (kept for test/driver compatibility)."""
+        t = self._next_event_time()
+        return () if t == _INF else (t,)
+
+    # ------------------------------------------------------------- forking
+    def fork(self) -> "SlurmSimulator":
+        """O(arrays) snapshot of the full scheduler state.
+
+        The fork shares the loaded Job objects read-only: their
+        start/end attributes are no longer written by the fork (views
+        materialize copies instead), so many forks of one base simulator
+        can diverge without corrupting each other. Jobs submitted to the
+        fork after the split are tracked and written back as usual.
+        """
+        s = SlurmSimulator.__new__(SlurmSimulator)
+        s.cluster = Cluster(self.cluster.n_nodes, self.cluster.down_nodes)
+        s.cluster.allocate_n(self.cluster.n_busy)
+        s.mode = self.mode
+        s.sched_interval = self.sched_interval
+        s.backfill = self.backfill
+        s.now = self.now
+        s._next_sched = self._next_sched
+        s._sched_passes = self._sched_passes
+        s._cap = self._cap
+        s._n = self._n
+        for name in ("_sub", "_rt", "_lim", "_nn", "_ids", "_start", "_end",
+                     "_arr_t", "_arr_i", "_q"):
+            setattr(s, name, getattr(self, name).copy())
+        s._jobs = list(self._jobs)
+        s._by_id = dict(self._by_id)
+        s._arr_ptr = self._arr_ptr
+        s._run_i = self._run_i.copy()
+        s._run_end = self._run_end.copy()
+        s._run_n = self._run_n
+        s._next_comp = self._next_comp
+        s._fin = list(self._fin)
+        s._makespan = self._makespan
+        s._forked = True
+        s._tracked = set()
+        return s
 
     # ------------------------------------------------------------ metrics
     def makespan(self) -> float:
-        return max((j.end_time for j in self.finished), default=0.0)
+        return self._makespan
 
     def jcts(self) -> np.ndarray:
-        return np.array([j.end_time - j.submit_time for j in self.finished])
+        f = np.fromiter(self._fin, np.int64, len(self._fin))
+        return self._end[f] - self._sub[f]
 
     def waits(self) -> np.ndarray:
-        return np.array([j.wait_time for j in self.finished])
+        f = np.fromiter(self._fin, np.int64, len(self._fin))
+        return self._start[f] - self._sub[f]
 
     @property
     def sched_passes(self) -> int:

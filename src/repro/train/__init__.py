@@ -1,7 +1,54 @@
-from .chain import ChainConfig, ChainedTrainer  # noqa: F401
-from .checkpoint import (AsyncCheckpointer, latest_step,  # noqa: F401
-                         restore_checkpoint, save_checkpoint)
-from .fault import ElasticPlan, PreemptionGuard, StragglerMonitor  # noqa: F401
-from .grad_compression import make_error_feedback_transform  # noqa: F401
-from .optimizer import OptimizerConfig, adamw_update, init_opt_state  # noqa: F401
-from .step import make_prefill_step, make_serve_step, make_train_step  # noqa: F401
+"""Training substrate: optimizer, step functions, checkpointing, chained
+sub-jobs, fault handling, gradient compression.
+
+Submodules are imported lazily (PEP 562) so light consumers — e.g.
+``repro.core``'s RL stack, which needs only ``repro.train.optimizer`` —
+don't eagerly pull in the checkpoint/chain machinery (and its optional
+dependencies) at import time.
+"""
+from typing import TYPE_CHECKING
+
+_EXPORTS = {
+    "ChainConfig": "chain",
+    "ChainedTrainer": "chain",
+    "AsyncCheckpointer": "checkpoint",
+    "latest_step": "checkpoint",
+    "restore_checkpoint": "checkpoint",
+    "save_checkpoint": "checkpoint",
+    "ElasticPlan": "fault",
+    "PreemptionGuard": "fault",
+    "StragglerMonitor": "fault",
+    "make_error_feedback_transform": "grad_compression",
+    "OptimizerConfig": "optimizer",
+    "adamw_update": "optimizer",
+    "init_opt_state": "optimizer",
+    "make_prefill_step": "step",
+    "make_serve_step": "step",
+    "make_train_step": "step",
+}
+
+__all__ = sorted(_EXPORTS)
+
+if TYPE_CHECKING:  # pragma: no cover - static analysis only
+    from .chain import ChainConfig, ChainedTrainer  # noqa: F401
+    from .checkpoint import (AsyncCheckpointer, latest_step,  # noqa: F401
+                             restore_checkpoint, save_checkpoint)
+    from .fault import (ElasticPlan, PreemptionGuard,  # noqa: F401
+                        StragglerMonitor)
+    from .grad_compression import make_error_feedback_transform  # noqa: F401
+    from .optimizer import (OptimizerConfig, adamw_update,  # noqa: F401
+                            init_opt_state)
+    from .step import (make_prefill_step, make_serve_step,  # noqa: F401
+                       make_train_step)
+
+
+def __getattr__(name: str):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(f".{mod}", __name__), name)
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

@@ -1,4 +1,4 @@
-"""Checkpointing: zstd-compressed msgpack shards with integrity manifests,
+"""Checkpointing: compressed msgpack shards with integrity manifests,
 async writes, and mesh-reshape restore (elastic scaling).
 
 This is the substrate Mirage's chained sub-jobs stand on: a sub-job
@@ -8,8 +8,15 @@ each logical array into whatever sharding the new mesh dictates).
 
 Format: one directory per step:
   step_000123/
-    manifest.json   — tree structure, shapes, dtypes, blake2 digests, step
+    manifest.json   — tree structure, shapes, dtypes, blake2 digests, step,
+                      compression codec
     data.msgpack.zst — flattened leaves (row-major bytes)
+
+Compression: ``zstandard`` when available, stdlib ``zlib`` otherwise
+(optional-dependency policy — see ROADMAP.md). The codec is recorded in
+the manifest so shards restore on any host; restoring a zstd shard on a
+host without ``zstandard`` raises a clear error instead of an opaque
+ImportError at module import time.
 """
 from __future__ import annotations
 
@@ -19,13 +26,41 @@ import json
 import pathlib
 import threading
 import time
+import zlib
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:                                 # optional: faster, smaller shards
+    import zstandard as zstd
+except ImportError:                  # pragma: no cover - env-dependent
+    zstd = None
+
+DEFAULT_CODEC = "zstd" if zstd is not None else "zlib"
+
+
+def _compress(raw: bytes, codec: str) -> bytes:
+    if codec == "zstd":
+        return zstd.ZstdCompressor(level=3).compress(raw)
+    if codec == "zlib":
+        return zlib.compress(raw, 3)
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
+
+
+def _decompress(blob: bytes, codec: str) -> bytes:
+    if codec == "zstd":
+        if zstd is None:
+            raise RuntimeError(
+                "checkpoint shard is zstd-compressed but the optional "
+                "'zstandard' module is not installed; install it or "
+                "re-save the checkpoint with the zlib codec")
+        return zstd.ZstdDecompressor().decompress(blob)
+    if codec == "zlib":
+        return zlib.decompress(blob)
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
 
 
 def _tree_paths(tree) -> List[Tuple[str, Any]]:
@@ -47,7 +82,7 @@ def save_checkpoint(directory: str, step: int, state: Dict,
     tmp.mkdir(parents=True, exist_ok=True)
     leaves = _tree_paths(state)
     manifest = {"step": step, "leaves": [], "time": time.time(),
-                "treedef": None}
+                "treedef": None, "codec": DEFAULT_CODEC}
     payload = {}
     for key, leaf in leaves:
         arr = np.asarray(jax.device_get(leaf))
@@ -58,7 +93,7 @@ def save_checkpoint(directory: str, step: int, state: Dict,
         })
         payload[key] = buf
     raw = msgpack.packb(payload, use_bin_type=True)
-    (tmp / "data.msgpack.zst").write_bytes(zstd.ZstdCompressor(level=3).compress(raw))
+    (tmp / "data.msgpack.zst").write_bytes(_compress(raw, DEFAULT_CODEC))
     (tmp / "manifest.json").write_text(json.dumps(manifest))
     if final.exists():
         import shutil
@@ -99,7 +134,8 @@ def restore_checkpoint(directory: str, template, step: Optional[int] = None,
             raise FileNotFoundError(f"no checkpoints under {directory}")
     d = base / f"step_{step:09d}"
     manifest = json.loads((d / "manifest.json").read_text())
-    raw = zstd.ZstdDecompressor().decompress((d / "data.msgpack.zst").read_bytes())
+    codec = manifest.get("codec", "zstd")   # pre-codec shards were zstd
+    raw = _decompress((d / "data.msgpack.zst").read_bytes(), codec)
     payload = msgpack.unpackb(raw, raw=False)
     meta = {m["key"]: m for m in manifest["leaves"]}
 

@@ -1,0 +1,116 @@
+"""Minimal stand-in for the optional ``hypothesis`` dependency.
+
+The optional-dependency policy (ROADMAP.md) requires every test module to
+collect and run without optional packages installed. When the real
+``hypothesis`` is absent, ``tests/conftest.py`` puts this shim on
+``sys.path``. It implements just the surface the suite uses —
+``given`` / ``settings`` / ``strategies`` with floats, integers,
+booleans, sampled_from, tuples and lists — as a deterministic seeded
+random-example runner (no shrinking, no database).
+"""
+from __future__ import annotations
+
+import functools
+import hashlib
+import random
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class strategies:  # namespace mirroring hypothesis.strategies
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def integers(min_value=0, max_value=100):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def sampled_from(elements):
+        seq = list(elements)
+        return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+    @staticmethod
+    def tuples(*strats):
+        return _Strategy(lambda rng: tuple(s.example(rng) for s in strats))
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10, **_kw):
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.example(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+    @staticmethod
+    def just(value):
+        return _Strategy(lambda rng: value)
+
+
+st = strategies
+
+
+class settings:
+    """Decorator recording (max_examples, ...); composes with @given."""
+
+    def __init__(self, max_examples=100, deadline=None, **_kw):
+        self.max_examples = max_examples
+        self.deadline = deadline
+
+    def __call__(self, fn):
+        fn._hyp_settings = self
+        return fn
+
+
+def given(*arg_strats, **kw_strats):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def runner(*args, **kwargs):
+            cfg = getattr(fn, "_hyp_settings", None) or getattr(
+                runner, "_hyp_settings", None)
+            n = cfg.max_examples if cfg is not None else 20
+            seed = int.from_bytes(hashlib.blake2b(
+                fn.__qualname__.encode(), digest_size=8).digest(), "big")
+            rng = random.Random(seed)
+            for _ in range(n):
+                ex_args = tuple(s.example(rng) for s in arg_strats)
+                ex_kw = {k: s.example(rng) for k, s in kw_strats.items()}
+                try:
+                    fn(*args, *ex_args, **kwargs, **ex_kw)
+                except _Unsatisfied:
+                    continue
+        # pytest must not see the example parameters as fixtures
+        del runner.__wrapped__
+        # pytest plugins (e.g. anyio) probe `fn.hypothesis.inner_test`
+        runner.hypothesis = type("_Hyp", (), {"inner_test": staticmethod(fn)})()
+        return runner
+    return decorate
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+
+    @classmethod
+    def all(cls):
+        return [cls.too_slow, cls.data_too_large, cls.filter_too_much]
+
+
+def assume(condition):
+    if not condition:
+        raise _Unsatisfied()
+
+
+class _Unsatisfied(Exception):
+    pass

@@ -1,0 +1,43 @@
+"""Collection-regression guard: every repro submodule must import with no
+optional dependencies installed (optional-dependency policy, ROADMAP.md).
+
+An unconditional import of an optional package (e.g. zstandard) anywhere
+in the tree breaks pytest collection of every module that transitively
+touches it; this test pins the whole import surface. The module walker
+(and its skip list) lives in scripts/check_collect.py — the tier-1
+verify entrypoint — so there is exactly one definition of "the import
+surface".
+"""
+import importlib
+import importlib.util
+import os
+import pathlib
+
+import pytest
+
+import repro
+
+_SCRIPT = pathlib.Path(__file__).resolve().parent.parent / "scripts" / \
+    "check_collect.py"
+_spec = importlib.util.spec_from_file_location("check_collect", _SCRIPT)
+check_collect = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_collect)
+
+
+@pytest.mark.parametrize("mod", check_collect.walk_module_names())
+def test_module_imports(mod):
+    importlib.import_module(mod)
+
+
+def test_core_does_not_pull_checkpoint():
+    """repro.core needs only repro.train.optimizer; the checkpoint stack
+    (and its optional codecs) must stay un-imported (PEP 562 laziness)."""
+    import subprocess
+    import sys
+    src = os.path.dirname(os.path.dirname(repro.__file__))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    code = ("import sys; import repro.core; "
+            "sys.exit('repro.train.checkpoint' in sys.modules)")
+    r = subprocess.run([sys.executable, "-c", code], env=env)
+    assert r.returncode == 0

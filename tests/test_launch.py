@@ -7,10 +7,14 @@ import pytest
 
 
 def run_mod(args, timeout=300):
+    import os
+    # hermetic env, but pin the jax platform: without it jax probes for
+    # accelerator plugins, which stalls for minutes in CPU-only containers
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+           "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")}
     return subprocess.run(
         [sys.executable, "-m"] + args, capture_output=True, text=True,
-        timeout=timeout, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                              "HOME": "/root"}, cwd=".")
+        timeout=timeout, env=env, cwd=".")
 
 
 def test_train_launcher_smoke(tmp_path):

@@ -65,11 +65,11 @@ def test_aux_loss_balanced_vs_skewed():
 
 
 def test_zero_pod_opt_specs():
-    from jax.sharding import AbstractMesh, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
     from repro.dist import sharding as shd
     from repro.models import transformer
     from repro.train.optimizer import OptimizerConfig, init_opt_state
-    mesh = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    mesh = shd.make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
     cfg = registry.get_config("tinyllama-1.1b").padded(16)
     pshape = jax.eval_shape(lambda: transformer.init(jax.random.PRNGKey(0), cfg))
     oshape = jax.eval_shape(lambda: init_opt_state(pshape, OptimizerConfig()))

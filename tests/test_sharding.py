@@ -4,13 +4,13 @@ the dry-run process)."""
 import jax
 import jax.numpy as jnp
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.dist import sharding as shd
 from repro.models import registry, transformer
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH = shd.make_abstract_mesh((16, 16), ("data", "model"))
+MESH3 = shd.make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def test_axis_size():

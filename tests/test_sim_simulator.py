@@ -114,6 +114,137 @@ def test_property_allocation_and_causality(specs):
         assert 0 <= busy <= 8
 
 
+@pytest.mark.parametrize("mode", ["fast", "exact"])
+def test_run_to_completion_drains_all_events(mode):
+    """No pending events may survive run_to_completion: tail completions
+    used to be dropped (heap indexed as if sorted), truncating makespan."""
+    jobs = synthesize_trace(V100, months=1, seed=11, load_scale=1.1)[:300]
+    sim = SlurmSimulator(V100.n_nodes, mode=mode)
+    sim.load([dataclasses.replace(j) for j in jobs])
+    sim.run_to_completion()
+    assert not sim._events                      # fully drained
+    assert len(sim.finished) == len(jobs)
+    assert sim.makespan() == pytest.approx(
+        max(j.end_time for j in sim.finished))
+    # makespan must cover the longest tail completion, not just the last
+    # event the heap happened to expose
+    assert all(j.end_time <= sim.makespan() for j in sim.finished)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.tuples(
+    st.floats(0, 500), st.floats(1, 400), st.floats(1, 400),
+    st.integers(1, 6)), min_size=1, max_size=25))
+def test_property_run_to_completion_drains(specs):
+    specs = [(t, rt, max(rt, tl), n) for (t, rt, tl, n) in specs]
+    jobs = mk_jobs(sorted(specs, key=lambda s: s[0]))
+    for mode in ("fast", "exact"):
+        sim = SlurmSimulator(6, mode=mode)
+        sim.load([dataclasses.replace(j) for j in jobs])
+        sim.run_to_completion()
+        assert not sim._events
+        assert len(sim.finished) == len(jobs)
+
+
+def test_exact_run_until_started_terminates():
+    """Exact mode must advance monotonically: a job that can never start
+    (bigger than the partition) must hit the hard limit, not spin."""
+    sim = SlurmSimulator(4, mode="exact", sched_interval=300.0)
+    sim.load(mk_jobs([(0.0, 100.0, 100.0, 2)]))
+    big = Job(job_id=99, user_id=0, submit_time=0.0, runtime=100.0,
+              time_limit=100.0, n_nodes=8)          # never fits
+    sim.submit(big)
+    wait = sim.run_until_started(big, hard_limit=2 * 24 * HOUR)
+    assert wait == float("inf")
+    assert sim.now >= 2 * 24 * HOUR                 # advanced, not spun
+
+
+def test_exact_run_until_started_normal_case():
+    sim = SlurmSimulator(4, mode="exact", sched_interval=60.0)
+    blocker = Job(job_id=1, user_id=0, submit_time=0.0, runtime=500.0,
+                  time_limit=500.0, n_nodes=4)
+    sim.load([blocker])
+    sim.run_until(10.0)
+    j = Job(job_id=2, user_id=0, submit_time=10.0, runtime=50.0,
+            time_limit=50.0, n_nodes=2)
+    sim.submit(j)
+    wait = sim.run_until_started(j)
+    assert wait >= 490.0 - 60.0                     # waits out the blocker
+    assert j.start_time >= blocker.end_time - 60.0
+
+
+def test_backfill_reservation_charging():
+    """EASY accounting: a backfill job outliving the head's reservation
+    must be charged against the spare nodes; with zero spare it may not
+    start, or the blocked head would be delayed."""
+    sim = SlurmSimulator(6, backfill=True)
+    jobs = mk_jobs([
+        (0.0, 100.0, 100.0, 3),    # A: runs now -> shadow at 100
+        (1.0, 300.0, 300.0, 6),    # B: blocked head (needs all 6, spare 0)
+        (2.0, 90.0, 95.0, 1),      # C: fits hole, ends by shadow -> OK
+        (3.0, 300.0, 300.0, 1),    # D: fits NOW but outlives shadow with
+    ])                             #    zero spare -> starting it would
+                                   #    delay the head past 100
+    sim.load(jobs)
+    sim.run_to_completion()
+    by_id = {j.job_id: j for j in sim.finished}
+    assert by_id[3].start_time < 10.0               # C backfilled now
+    assert by_id[2].start_time == pytest.approx(100.0, abs=1.0)  # head on time
+    assert by_id[4].start_time >= by_id[2].start_time  # D never jumped ahead
+
+
+def test_backfill_never_delays_head_vs_no_backfill():
+    """The blocked head must start no later with backfill than without."""
+    for seed in (0, 1, 2):
+        jobs = synthesize_trace(V100, months=1, seed=seed,
+                                load_scale=1.2)[:250]
+        on = replay(jobs, V100.n_nodes, mode="fast", backfill=True)
+        off = replay(jobs, V100.n_nodes, mode="fast", backfill=False)
+        mk_on = on.makespan()
+        mk_off = off.makespan()
+        assert mk_on <= mk_off * 1.05   # backfill helps (or is neutral)
+
+
+def test_fork_matches_fresh_replay():
+    """fork() must be a perfect snapshot: continuing a fork equals a fresh
+    replay to the same instant (the VectorProvisionEnv contract)."""
+    jobs = synthesize_trace(V100, months=1, seed=3, load_scale=1.0)[:400]
+    t_fork, t_end = 5 * 24 * HOUR, 12 * 24 * HOUR
+    base = SlurmSimulator(V100.n_nodes)
+    base.load([dataclasses.replace(j) for j in jobs])
+    base.run_until(t_fork)
+    forked = base.fork()
+    forked.run_until(t_end)
+    fresh = SlurmSimulator(V100.n_nodes)
+    fresh.load([dataclasses.replace(j) for j in jobs])
+    fresh.run_until(t_end)
+    assert len(forked.finished) == len(fresh.finished)
+    np.testing.assert_allclose(np.sort(forked.jcts()), np.sort(fresh.jcts()))
+    assert forked.cluster.n_busy == fresh.cluster.n_busy
+    assert forked.makespan() == pytest.approx(fresh.makespan())
+
+
+def test_fork_does_not_mutate_base_or_trace():
+    jobs = mk_jobs([(0.0, 100.0, 200.0, 2), (50.0, 100.0, 200.0, 2)])
+    sim = SlurmSimulator(4)
+    sim.load(jobs)
+    sim.run_until(10.0)
+    f = sim.fork()
+    extra = Job(job_id=77, user_id=1, submit_time=10.0, runtime=5.0,
+                time_limit=10.0, n_nodes=4)
+    f.submit(extra)
+    f.run_to_completion()
+    # base untouched by the fork's divergence
+    assert len(sim.finished) == 0
+    assert all(j.job_id != 77 for j in sim.queue + sim.finished)
+    # the fork never writes into the shared loaded Job objects: job 2
+    # (submit at t=50) started inside the fork, but only the base may
+    # stamp the shared dataclass
+    assert jobs[1].start_time == -1.0
+    sim.run_to_completion()
+    assert len(sim.finished) == 2
+
+
 def test_fidelity_fast_vs_exact():
     """§5.2: makespan diff < 2.5%, JCT geomean ratio < 1.15."""
     jobs = synthesize_trace(V100, months=1, seed=2, load_scale=0.9)[:800]
