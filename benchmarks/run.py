@@ -3,24 +3,43 @@
 #
 # Scale knobs: REPRO_BENCH_QUICK=0 for paper-scale episode counts (slow);
 # default is the quick profile (~15 min on this CPU container).
+#
+# Usage: ``python -m benchmarks.run [filter ...]`` — with arguments, only
+# suites whose names contain one of the (case-insensitive) filters run,
+# e.g. ``python -m benchmarks.run rollout`` for the tracked RL rollout
+# throughput number alone. scripts/check_bench.py uses this to gate
+# regressions against the committed experiments/bench/*.json baselines.
 import sys
 import time
 import traceback
 
 
-def main() -> None:
+def suites():
     from . import (bench_interruption, bench_kernels, bench_moe_gating,
                    bench_roofline, bench_simulator)
-    suites = [
+    return [
         ("simulator (Table 1, 5.2)", bench_simulator.run),
+        ("rollout throughput (5.1)", bench_simulator.bench_rollout_throughput),
         ("kernels", bench_kernels.run),
         ("moe gating (4.7)", bench_moe_gating.run),
         ("roofline (g)", bench_roofline.run),
         ("interruption (Figs. 8-10, abstract)", bench_interruption.run),
     ]
+
+
+def main(argv=None) -> None:
+    args = sys.argv[1:] if argv is None else argv
+    selected = suites()
+    if args:
+        selected = [s for s in selected
+                    if any(a.lower() in s[0].lower() for a in args)]
+        if not selected:
+            print(f"no benchmark suite matches {args!r}; available: "
+                  + ", ".join(name for name, _ in suites()))
+            sys.exit(2)
     t0 = time.time()
     failed = []
-    for name, fn in suites:
+    for name, fn in selected:
         print(f"# --- {name} ---", flush=True)
         try:
             fn()

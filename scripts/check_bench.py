@@ -1,0 +1,122 @@
+#!/usr/bin/env python
+"""Benchmark regression gate: re-run tracked benchmarks into a scratch
+directory and compare against the committed baselines in
+``experiments/bench/*.json``. Exits nonzero when a tracked higher-is-
+better metric drops below ``tolerance`` x baseline (default 0.6 — the
+CPU container is shared and noisy).
+
+Usage:
+  PYTHONPATH=src python scripts/check_bench.py [--tolerance 0.6] [--update]
+  PYTHONPATH=src python scripts/check_bench.py rollout   # subset by name
+
+``--update`` rewrites the committed baselines from the fresh run instead
+of gating (use after an intentional perf change, commit the diff).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import shutil
+import sys
+import tempfile
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+sys.path.insert(0, str(ROOT))
+
+# artifact stem -> {metric: direction}; all tracked metrics are
+# higher-is-better ("up"). The suite filter names the benchmarks/run.py
+# suite that produces the artifact.
+TRACKED = {
+    "rollout_throughput": {
+        "suite": "rollout throughput",
+        "metrics": {"vector_episodes_per_s": "up", "speedup": "up"},
+    },
+    "sim_overhead": {
+        "suite": "simulator",
+        "metrics": {"sim_months_per_wallclock_min": "up"},
+    },
+}
+
+BASELINE_DIR = ROOT / "experiments" / "bench"
+
+
+def run_suites(filters, out_dir: pathlib.Path) -> None:
+    os.environ["REPRO_BENCH_OUT"] = str(out_dir)
+    # benchmarks.common reads REPRO_BENCH_OUT at import time
+    for mod in [m for m in list(sys.modules) if m.startswith("benchmarks")]:
+        del sys.modules[mod]
+    from benchmarks.run import main as bench_main
+    try:
+        bench_main(filters)
+    except SystemExit as e:          # run.py exits nonzero on suite errors
+        if e.code:
+            raise
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("names", nargs="*",
+                    help="subset of tracked artifacts (substring match)")
+    ap.add_argument("--tolerance", type=float, default=0.6,
+                    help="fresh >= tolerance * baseline passes (default .6)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite baselines from the fresh run")
+    args = ap.parse_args()
+
+    tracked = {k: v for k, v in TRACKED.items()
+               if (BASELINE_DIR / f"{k}.json").exists() or args.update}
+    if args.names:
+        tracked = {k: v for k, v in tracked.items()
+                   if any(n.lower() in k for n in args.names)}
+    if not tracked:
+        print("check_bench: nothing tracked matches"
+              f" {args.names!r} with baselines in {BASELINE_DIR}")
+        return 2
+
+    filters = sorted({v["suite"] for v in tracked.values()})
+    scratch = pathlib.Path(tempfile.mkdtemp(prefix="bench_gate_"))
+    try:
+        print(f"check_bench: running suites {filters} -> {scratch}")
+        run_suites(filters, scratch)
+        failures = []
+        for stem, spec in tracked.items():
+            fresh_path = scratch / f"{stem}.json"
+            if not fresh_path.exists():
+                failures.append(f"{stem}: fresh run produced no artifact")
+                continue
+            fresh = json.loads(fresh_path.read_text())
+            base_path = BASELINE_DIR / f"{stem}.json"
+            if args.update:
+                BASELINE_DIR.mkdir(parents=True, exist_ok=True)
+                shutil.copyfile(fresh_path, base_path)
+                print(f"check_bench: updated baseline {base_path}")
+                continue
+            base = json.loads(base_path.read_text())
+            for metric in spec["metrics"]:
+                if metric not in base:
+                    print(f"check_bench: {stem}.{metric} not in baseline "
+                          "(skipping)")
+                    continue
+                b, f = float(base[metric]), float(fresh.get(metric, 0.0))
+                ok = f >= args.tolerance * b
+                print(f"check_bench: {stem}.{metric}: fresh={f:.3f} "
+                      f"baseline={b:.3f} ({'OK' if ok else 'REGRESSION'})")
+                if not ok:
+                    failures.append(
+                        f"{stem}.{metric}: {f:.3f} < "
+                        f"{args.tolerance} * {b:.3f}")
+        if failures:
+            print("check_bench: FAILED\n  " + "\n  ".join(failures))
+            return 1
+        print("check_bench: OK" + (" (baselines updated)" if args.update
+                                   else ""))
+        return 0
+    finally:
+        shutil.rmtree(scratch, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

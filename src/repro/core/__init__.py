@@ -6,8 +6,9 @@ from .dqn import DQNConfig, DQNLearner  # noqa: F401
 from .foundation import FoundationConfig, init_foundation, q_values  # noqa: F401
 from .pg import PGConfig, PGLearner  # noqa: F401
 from .provisioner import (EnvConfig, ProvisionEnv,  # noqa: F401
-                          VectorProvisionEnv, collect_offline_samples)
+                          ReplayCheckpointCache, VectorProvisionEnv,
+                          collect_offline_samples)
 from .replay import ReplayBuffer  # noqa: F401
 from .reward import RewardConfig, shape_reward  # noqa: F401
 from .state import (STATE_DIM, StateHistory, StateHistoryBatch,  # noqa: F401
-                    encode_snapshot, encode_snapshots)
+                    encode_sample_batch, encode_snapshot, encode_snapshots)

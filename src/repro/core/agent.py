@@ -24,8 +24,8 @@ from .dqn import DQNConfig, DQNLearner
 from .foundation import (FoundationConfig, init_foundation, q_values,
                          reward_prediction)
 from .pg import PGConfig, PGLearner
-from .provisioner import (ProvisionEnv, VectorProvisionEnv,
-                          collect_offline_samples)
+from .provisioner import (ProvisionEnv, ReplayCheckpointCache,
+                          VectorProvisionEnv, collect_offline_samples)
 from .replay import ReplayBuffer
 from .state import STATE_DIM
 from .trees import GradientBoosting, RandomForest
@@ -82,17 +82,18 @@ def pretrain_foundation(fc: FoundationConfig, samples: List[Dict],
 def _rollout_batch(venv: VectorProvisionEnv, act_batch) -> Tuple[
         List[List[Tuple]], np.ndarray]:
     """Roll every lane to termination; returns per-lane transition lists
-    (s, a, s2, done) and the episode returns."""
+    (s, a, s2, done) and the episode returns. The env serves obs as views
+    of persistent buffers, so every retained matrix is copied here."""
     obs = venv.reset()
     B = venv.batch
     trajs: List[List[Tuple]] = [[] for _ in range(B)]
     finals = np.zeros(B)
-    mats = obs["matrix"]
+    mats = obs["matrix"].copy()
     while not venv.dones.all():
         acts = act_batch(mats)
         live = ~venv.dones
         nobs, r, dones, _ = venv.step(acts)
-        nmats = nobs["matrix"]
+        nmats = nobs["matrix"].copy()
         for i in np.flatnonzero(live):
             trajs[i].append((mats[i], int(acts[i]), nmats[i], bool(dones[i])))
             if dones[i]:
@@ -112,10 +113,11 @@ def train_online_dqn(env: ProvisionEnv, learner: DQNLearner,
     buf = ReplayBuffer(replay_capacity, learner.fc.history, STATE_DIM, seed)
     returns: List[float] = []
     B = batch or min(episodes, 8)
+    cache = ReplayCheckpointCache(env.trace, env.cfg.n_nodes)
     while len(returns) < episodes:
         b = min(B, episodes - len(returns))
         venv = VectorProvisionEnv(env.trace, env.cfg, b,
-                                  seed=seed + len(returns))
+                                  seed=seed + len(returns), cache=cache)
         trajs, finals = _rollout_batch(
             venv, lambda m: learner.act_batch(m, explore=True))
         for i in range(b):
@@ -134,10 +136,11 @@ def train_online_pg(env: ProvisionEnv, learner: PGLearner,
                     batch: Optional[int] = None) -> List[float]:
     returns: List[float] = []
     B = batch or min(episodes, 8)
+    cache = ReplayCheckpointCache(env.trace, env.cfg.n_nodes)
     while len(returns) < episodes:
         b = min(B, episodes - len(returns))
         venv = VectorProvisionEnv(env.trace, env.cfg, b,
-                                  seed=seed + len(returns))
+                                  seed=seed + len(returns), cache=cache)
         trajs, finals = _rollout_batch(
             venv, lambda m: learner.act_batch(m, explore=True))
         for i in range(b):

@@ -17,29 +17,40 @@ online training prevents the infinite-episode case; the fallback bounds
 it in evaluation too).
 
 Batched rollouts: ``VectorProvisionEnv`` steps B independent episodes in
-lockstep and returns stacked (B, k, 40) state matrices. Its ``reset``
-replays the background trace ONCE and forks the simulator at each
-episode's warm-up point (``SlurmSimulator.fork``), so the dominant
-per-episode cost — weeks of simulated background load — is paid once per
-batch instead of once per episode. Lane ``i`` is bit-identical to a
-scalar ``ProvisionEnv`` seeded ``seed + i``: the fork point is exactly
-the instant a scalar reset would have replayed to, and the event engine
-is deterministic, so forked state == fresh-replay state.
+lockstep and returns stacked (B, k, 40) state matrices. Its observation
+path is one numpy pass per lockstep interval: live lanes' simulators are
+sampled into one flat ``SampleBatch`` (``repro.sim.sample_batch``),
+encoded with the segment-sorted ``encode_sample_batch`` kernel into a
+preallocated slab, and pushed into a persistent ``StateHistoryBatch``
+ring with per-lane cursors; ``step``/``reset`` serve views of persistent
+buffers (copy anything you retain across steps).
+
+``reset`` forks each lane's simulator off a ``ReplayCheckpointCache``: the
+shared background replay is paid once per cache (not once per reset), with
+``fork()`` checkpoints taken at fixed simulated-time intervals so later
+resets — and later training epochs sharing the cache — fork from the
+nearest checkpoint at or before their warm-up point. Lane ``i`` remains
+bit-identical to a scalar ``ProvisionEnv`` seeded ``seed + i``: a forked
+checkpoint advanced to the warm-up point equals a fresh replay to the
+same instant (the event engine is deterministic), and the batched
+encoder/ring reproduce the scalar per-lane push sequences exactly.
 """
 from __future__ import annotations
 
+import bisect
 import copy
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.sim.simulator import SlurmSimulator
+from repro.sim.simulator import SlurmSimulator, sample_batch
 from repro.sim.trace import Job
 from repro.sim.workload import SubJobChain, pair_outcome
 from .reward import RewardConfig, shape_reward
-from .state import (SAMPLE_INTERVAL, STATE_DIM, StateHistory, encode_snapshot,
-                    summary_features)
+from .state import (SAMPLE_INTERVAL, STATE_DIM, StateHistory,
+                    StateHistoryBatch, encode_sample_batch, encode_snapshot,
+                    summary_features, summary_offsets)
 
 HOUR = 3600.0
 DAY = 24 * HOUR
@@ -155,7 +166,16 @@ class ProvisionEnv:
             else:
                 self._advance(self.cfg.interval)
                 return self.obs(), 0.0, False, {}
-        # submit (possibly forced at the predecessor's end)
+        r, info = self._submit_successor(forced)
+        return self.obs(), r, True, info
+
+    def _submit_successor(self, forced: bool) -> Tuple[float, Dict]:
+        """Submit the successor (possibly forced at the predecessor's end),
+        run it to start, and score the episode outcome. Shared by the
+        scalar step and the vector env's batched step (which serves the
+        final observation from its own ring instead of ``obs()``)."""
+        pred_end = self.pred.start_time + min(self.pred.runtime,
+                                              self.pred.time_limit)
         t_sub = max(self.sim.now, pred_end if forced else self.sim.now)
         self.sim.run_until(t_sub)
         self.succ = self.chain.make_sub(1, t_sub)
@@ -165,9 +185,108 @@ class ProvisionEnv:
             self.pred.end_time = pred_end
         kind, amount = pair_outcome(self.pred, self.succ)
         r = shape_reward(kind, amount, self.cfg.reward)
-        info = {"kind": kind, "amount_s": amount, "wait_s": wait,
-                "forced": forced}
-        return self.obs(), r, True, info
+        return r, {"kind": kind, "amount_s": amount, "wait_s": wait,
+                   "forced": forced}
+
+
+def _sim_nbytes(sim: SlurmSimulator) -> int:
+    """Estimated marginal memory of one checkpoint fork: only the state
+    ``fork()`` copies eagerly (start/end, running arrays, finished list)
+    — the job-store arrays and containers are shared copy-on-write with
+    the frontier and amortize across the whole ring."""
+    n = 0
+    for name in ("_start", "_end", "_run_i", "_run_end"):
+        n += getattr(sim, name).nbytes
+    return n + 8 * len(sim._fin) + 2048
+
+
+class ReplayCheckpointCache:
+    """Warm-up replay cache: checkpointed forks of one background replay.
+
+    A single frontier simulator replays the trace forward on demand,
+    snapshotting ``fork()`` checkpoints every ``interval`` of simulated
+    time. ``fork_at(t)`` serves a simulator advanced to exactly ``t``:
+    ahead of the frontier it extends the replay (cold path, paid once per
+    region of the trace); behind it, it forks the nearest checkpoint at or
+    before ``t`` and replays only the remainder (warm path). Shared across
+    ``VectorProvisionEnv.reset`` calls and across training epochs, so
+    repeated resets stop re-paying the trace-head replay.
+
+    Determinism: the event engine advances identically whether driven in
+    one ``run_until`` or many, and ``fork()`` is an exact state snapshot,
+    so a checkpoint fork advanced to ``t`` is bit-identical to a fresh
+    replay to ``t``.
+
+    The checkpoint ring is bounded by ``max_bytes``: on overflow every
+    other interior checkpoint is dropped (density halves, coverage and the
+    endpoints stay), keeping the worst-case warm replay bounded while the
+    memory stays under the configured budget.
+    """
+
+    def __init__(self, trace: Sequence[Job], n_nodes: int, mode: str = "fast",
+                 interval: float = 6 * HOUR, max_bytes: int = 256 << 20):
+        assert interval > 0
+        self.trace = trace
+        self.interval = interval
+        self.max_bytes = max_bytes
+        self._frontier = SlurmSimulator(n_nodes, mode=mode)
+        self._frontier.load([copy.copy(j) for j in trace])
+        self._times: List[float] = []
+        self._sims: List[SlurmSimulator] = []
+        self._bytes: List[int] = []
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._sims)
+
+    @property
+    def nbytes(self) -> int:
+        return sum(self._bytes)
+
+    def fork_at(self, t: float) -> SlurmSimulator:
+        """A forked simulator advanced to exactly ``t`` (>= 0)."""
+        if t == self._frontier.now:
+            self.hits += 1                  # no replay needed at all
+            return self._frontier.fork()
+        if t > self._frontier.now:
+            self.misses += 1
+            self._advance_frontier(t)
+            return self._frontier.fork()
+        j = bisect.bisect_right(self._times, t) - 1
+        if j >= 0:
+            self.hits += 1
+            f = self._sims[j].fork()
+            f.run_until(t)
+            return f
+        # no checkpoint early enough (evicted): fresh short replay
+        self.misses += 1
+        sim = SlurmSimulator(self._frontier.cluster.n_nodes,
+                             mode=self._frontier.mode)
+        sim.load([copy.copy(j) for j in self.trace])
+        sim.run_until(t)
+        return sim
+
+    def _advance_frontier(self, t: float) -> None:
+        fr = self._frontier
+        if not self._sims:
+            self._add(fr.now, fr.fork())     # pristine head checkpoint
+        while True:
+            nxt = (np.floor(fr.now / self.interval) + 1) * self.interval
+            if nxt > t:
+                break
+            fr.run_until(float(nxt))
+            self._add(float(nxt), fr.fork())
+        fr.run_until(t)
+
+    def _add(self, t: float, sim: SlurmSimulator) -> None:
+        self._times.append(t)
+        self._sims.append(sim)
+        self._bytes.append(_sim_nbytes(sim))
+        while len(self._sims) > 2 and sum(self._bytes) > self.max_bytes:
+            drop = range(len(self._sims) - 2, 0, -2)   # every other interior
+            for k in drop:
+                del self._times[k], self._sims[k], self._bytes[k]
 
 
 class VectorProvisionEnv:
@@ -177,34 +296,96 @@ class VectorProvisionEnv:
     "pred_remaining" (B,), "time_pos" (B,).
     ``step(actions)`` -> (obs, rewards (B,), dones (B,), infos list).
 
-    Lanes that finish stay frozen (done=True, reward 0) until the next
-    reset. Lane i reproduces a scalar ProvisionEnv seeded ``seed + i``
-    exactly; the speedup comes from replaying the shared background
-    trace once per batch and forking the simulator at each episode's
-    warm-up point.
+    Lanes that finish stay frozen (done=True, reward 0, no per-lane work)
+    until the next reset. Lane i reproduces a scalar ProvisionEnv seeded
+    ``seed + i`` exactly. The speedup comes from three places: the shared
+    background replay is served from a ``ReplayCheckpointCache`` (pass
+    ``cache=`` to share it across env instances/epochs; resets after the
+    first fork from checkpoints instead of replaying the trace head), the
+    whole observation pipeline is one numpy pass per lockstep interval
+    (flat ``sample_batch`` -> segment-sorted ``encode_sample_batch`` ->
+    per-lane-cursor ring), and obs are served as views of persistent
+    buffers. Consumers must copy any obs array they retain across steps.
     """
 
     def __init__(self, trace: Sequence[Job], cfg: EnvConfig, batch: int,
-                 seed: int = 0):
+                 seed: int = 0, cache: Optional[ReplayCheckpointCache] = None):
         assert batch >= 1
         self.trace = trace
         self.cfg = cfg
         self.batch = batch
         self.envs = [ProvisionEnv(trace, cfg, seed=seed + i)
                      for i in range(batch)]
+        self.cache = cache if cache is not None else ReplayCheckpointCache(
+            trace, cfg.n_nodes)
         self.dones = np.ones(batch, bool)      # not yet reset
-        self._obs: List[Dict] = [{}] * batch
+        k = cfg.history
+        self._hist = StateHistoryBatch(batch, k)
+        # persistent obs buffers (served as views; copy to retain)
+        self._mat = np.zeros((batch, k, STATE_DIM), np.float32)
+        self._summary = np.zeros((batch, 4 * STATE_DIM), np.float32)
+        self._pred_remaining = np.zeros(batch)
+        self._time_pos = np.zeros(batch)
+        self._slab = np.empty((batch, STATE_DIM), np.float32)
+        # per-lane episode state (raw predecessor features + end time)
+        self._has_pred = np.zeros(batch, bool)
+        self._pred_size = np.zeros(batch)
+        self._pred_limit = np.zeros(batch)
+        self._pred_qtime = np.zeros(batch)
+        self._pred_start = np.full(batch, -1.0)
+        self._pred_end = np.zeros(batch)
+        self._succ_cols = np.broadcast_to(
+            np.array([float(cfg.chain_nodes), cfg.sub_limit]), (batch, 2))
+        t0 = trace[0].submit_time
+        self._trace_t0 = t0
+        self._trace_span = max(trace[-1].submit_time - t0, 1.0)
 
     # ------------------------------------------------------------ helpers
-    def _stack(self) -> Dict:
-        o = self._obs
-        return {
-            "matrix": np.stack([x["matrix"] for x in o]),
-            "summary": np.stack([x["summary"] for x in o]),
-            "pred_remaining": np.array([x["pred_remaining"] for x in o],
-                                       np.float64),
-            "time_pos": np.array([x["time_pos"] for x in o], np.float64),
-        }
+    def _obs_view(self) -> Dict:
+        return {"matrix": self._mat, "summary": self._summary,
+                "pred_remaining": self._pred_remaining,
+                "time_pos": self._time_pos}
+
+    def _encode_lanes(self, lanes: np.ndarray) -> np.ndarray:
+        """Sample + encode ``lanes``' simulators -> (n, 40) slab view."""
+        sb = sample_batch([self.envs[int(i)].sim for i in lanes])
+        pred_cols = None
+        if self._has_pred[lanes].any():
+            pred_cols = np.zeros((lanes.size, 4))
+            m = self._has_pred[lanes]
+            l = lanes[m]
+            pred_cols[m, 0] = self._pred_size[l]
+            pred_cols[m, 1] = self._pred_limit[l]
+            pred_cols[m, 2] = self._pred_qtime[l]
+            st = self._pred_start[l]
+            pred_cols[m, 3] = np.where(
+                st >= 0, np.maximum(sb.times[m] - st, 0.0), 0.0)
+        out = self._slab[:lanes.size]
+        return encode_sample_batch(sb, self.cfg.n_nodes, self.cfg.sub_limit,
+                                   pred_cols, self._succ_cols[:lanes.size],
+                                   out=out)
+
+    def _refresh_obs(self, lanes: np.ndarray) -> None:
+        """Re-materialize ``lanes``' rows of the served obs buffers."""
+        if not lanes.size:
+            return
+        self._hist.matrix_into(self._mat, lanes)
+        mat, k = self._mat, self.cfg.history
+        i1, i6, i24 = summary_offsets(k)
+        cur = mat[lanes, k - 1]
+        S = self._summary
+        S[lanes, 0:STATE_DIM] = cur
+        S[lanes, STATE_DIM:2 * STATE_DIM] = cur - mat[lanes, i1]
+        S[lanes, 2 * STATE_DIM:3 * STATE_DIM] = cur - mat[lanes, i6]
+        S[lanes, 3 * STATE_DIM:4 * STATE_DIM] = cur - mat[lanes, i24]
+        nows = np.fromiter((self.envs[int(i)].sim.now for i in lanes),
+                           np.float64, lanes.size)
+        started = self._pred_start[lanes] >= 0
+        self._pred_remaining[lanes] = np.where(
+            started,
+            self._pred_start[lanes] + self._pred_limit[lanes] - nows,
+            self.cfg.sub_limit)
+        self._time_pos[lanes] = (nows - self._trace_t0) / self._trace_span
 
     @property
     def _t_start_range(self) -> Tuple[float, float]:
@@ -213,34 +394,92 @@ class VectorProvisionEnv:
     # ------------------------------------------------------------ episode
     def reset(self, t_starts: Optional[Sequence[float]] = None) -> Dict:
         lo, hi = self._t_start_range
-        t0s = [float(t_starts[i]) if t_starts is not None
-               else float(env.rng.uniform(lo, hi))
-               for i, env in enumerate(self.envs)]
-        # one background replay, forked at each lane's warm-up point
-        base = SlurmSimulator(self.cfg.n_nodes, mode="fast")
-        base.load([copy.copy(j) for j in self.trace])
-        order = np.argsort([self.envs[i].warmup_point(t0s[i])
-                            for i in range(self.batch)], kind="stable")
-        for i in order:
+        t0s = np.array([float(t_starts[i]) if t_starts is not None
+                        else float(env.rng.uniform(lo, hi))
+                        for i, env in enumerate(self.envs)])
+        wps = np.array([self.envs[i].warmup_point(t0s[i])
+                        for i in range(self.batch)])
+        # checkpointed forks, ascending so the frontier advances monotonically
+        for i in np.argsort(wps, kind="stable"):
             i = int(i)
-            base.run_until(self.envs[i].warmup_point(t0s[i]))
-            self._obs[i] = self.envs[i]._begin_episode(base.fork(), t0s[i])
+            env = self.envs[i]
+            env.sim = self.cache.fork_at(wps[i])
+            env.hist = None          # the batch ring owns history now
+            env.pred = env.succ = env.chain = None
+        self._hist.clear()
+        self._has_pred[:] = False
+        self._pred_start[:] = -1.0
+        idx = np.arange(self.batch)
+        # warm-up fill, batched: each lane replays the scalar push sequence
+        # (snapshot at the window head, one per interval crossing) but the
+        # encoding runs as one flat pass over all lanes still advancing
+        self._hist.push(self._encode_lanes(idx), idx)
+        ends = wps + np.maximum(t0s - wps, 0.0)
+        active = idx
+        while True:
+            nows = np.fromiter((self.envs[int(i)].sim.now for i in active),
+                               np.float64, active.size)
+            active = active[nows + self.cfg.interval <= ends[active]]
+            if not active.size:
+                break
+            for i in active:
+                env = self.envs[int(i)]
+                env.sim.step(self.cfg.interval)
+            self._hist.push(self._encode_lanes(active), active)
+        # partial advance to the episode start, then the predecessor
+        for i in range(self.batch):
+            env = self.envs[i]
+            if env.sim.now < ends[i]:
+                env.sim.step(ends[i] - env.sim.now)
+            env.chain = SubJobChain(
+                user_id=int(env.rng.integers(1000, 2000)),
+                n_nodes=self.cfg.chain_nodes, sub_limit=self.cfg.sub_limit,
+                next_id=int(env.rng.integers(10**6, 10**7)))
+            env.pred = env.chain.make_sub(0, env.sim.now)
+            env.sim.submit(env.pred)
+            env.sim.run_until_started(env.pred)
+            self._pred_size[i] = env.pred.n_nodes
+            self._pred_limit[i] = env.pred.time_limit
+            self._pred_qtime[i] = max(env.pred.wait_time, 0.0)
+            self._pred_start[i] = env.pred.start_time
+            self._pred_end[i] = env.pred.start_time + min(
+                env.pred.runtime, env.pred.time_limit)
+        self._has_pred[:] = True
+        self._hist.push(self._encode_lanes(idx), idx)
         self.dones = np.zeros(self.batch, bool)
-        return self._stack()
+        self._refresh_obs(idx)
+        return self._obs_view()
 
     def step(self, actions: Sequence[int]
              ) -> Tuple[Dict, np.ndarray, np.ndarray, List[Dict]]:
+        actions = np.asarray(actions, np.int64)
         rewards = np.zeros(self.batch)
         infos: List[Dict] = [{} for _ in range(self.batch)]
-        for i, env in enumerate(self.envs):
-            if self.dones[i]:
-                continue
-            o, r, d, info = env.step(int(actions[i]))
-            self._obs[i] = o
+        live = np.flatnonzero(~self.dones)
+        if not live.size:
+            return self._obs_view(), rewards, self.dones.copy(), infos
+        nows = np.fromiter((self.envs[int(i)].sim.now for i in live),
+                           np.float64, live.size)
+        forced = (actions[live] == 0) & (
+            nows + self.cfg.interval >= self._pred_end[live])
+        submit = (actions[live] == 1) | forced
+        sub_idx = live[submit]
+        wait_idx = live[~submit]
+        # submitting lanes finish: their obs window freezes at the current
+        # per-lane cursor (the scalar env pushes nothing on submission)
+        for i, f in zip(sub_idx, forced[submit]):
+            i = int(i)
+            r, info = self.envs[i]._submit_successor(bool(f))
             rewards[i] = r
             infos[i] = info
-            self.dones[i] = d
-        return self._stack(), rewards, self.dones.copy(), infos
+            self.dones[i] = True
+        # waiting lanes advance one interval and push one batched slab
+        for i in wait_idx:
+            self.envs[int(i)].sim.step(self.cfg.interval)
+        if wait_idx.size:
+            self._hist.push(self._encode_lanes(wait_idx), wait_idx)
+        self._refresh_obs(np.concatenate([wait_idx, sub_idx]))
+        return self._obs_view(), rewards, self.dones.copy(), infos
 
 
 # ------------------------------------------------------- offline sampling
@@ -253,7 +492,9 @@ def collect_offline_samples(env: ProvisionEnv, n_episodes: int,
 
     Probes run on a VectorProvisionEnv: all points of one episode share a
     start instant, so they fork from the same background state and the
-    whole (episode x point) grid rolls out in lockstep batches.
+    whole (episode x point) grid rolls out in lockstep batches off one
+    shared ReplayCheckpointCache (chunks after the first fork from warm
+    checkpoints instead of re-replaying the trace head).
     """
     rng = np.random.default_rng(seed)
     lo, hi = env._t_start_range
@@ -261,17 +502,20 @@ def collect_offline_samples(env: ProvisionEnv, n_episodes: int,
     lanes = [(ep, p) for ep in range(n_episodes) for p in range(n_points)]
     out: List[Optional[Dict]] = [None] * len(lanes)
     B = batch or min(len(lanes), 32)
+    cache = ReplayCheckpointCache(env.trace, env.cfg.n_nodes)
     for c0 in range(0, len(lanes), B):
         chunk = lanes[c0:c0 + B]
         venv = VectorProvisionEnv(env.trace, env.cfg, len(chunk),
-                                  seed=seed + c0)
+                                  seed=seed + c0, cache=cache)
         obs = venv.reset(t_starts=[ep_t0[ep] for ep, _ in chunk])
         targets = [venv.envs[i].pred.start_time
                    + ((p + 0.5) / n_points) * env.cfg.sub_limit
                    for i, (_, p) in enumerate(chunk)]
         # per lane: the observation after the last wait step feeds the
-        # sample; the reward comes from the (possibly forced) submission
-        mats = [obs["matrix"][i] for i in range(len(chunk))]
+        # sample; the reward comes from the (possibly forced) submission.
+        # obs arrays are views of the env's persistent buffers -> copy
+        # anything retained across steps.
+        mats = [obs["matrix"][i].copy() for i in range(len(chunk))]
         tps = [float(obs["time_pos"][i]) for i in range(len(chunk))]
         while not venv.dones.all():
             acts = []
@@ -295,6 +539,6 @@ def collect_offline_samples(env: ProvisionEnv, n_episodes: int,
                         "time_pos": tps[i],
                     }
                 else:       # still waiting: roll the pre-submit obs
-                    mats[i] = nobs["matrix"][i]
+                    mats[i] = nobs["matrix"][i].copy()
                     tps[i] = float(nobs["time_pos"][i])
     return [s for s in out if s is not None]

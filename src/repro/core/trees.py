@@ -49,29 +49,44 @@ class RegressionTree:
         self.nodes.append(_Node(value=float(y.mean()) if len(y) else 0.0))
         if depth >= self.max_depth or len(y) < 2 * self.min_leaf or y.std() < 1e-9:
             return idx
-        n_feat = X.shape[1]
+        n, n_feat = X.shape
         feats = self.rng.choice(
             n_feat, max(1, int(self.feature_frac * n_feat)), replace=False)
-        best = (0.0, -1, 0.0)  # (gain, feature, threshold)
-        parent_sse = float(((y - y.mean()) ** 2).sum())
-        for f in feats:
-            col = X[:, f]
-            qs = np.unique(np.quantile(col, np.linspace(0.05, 0.95,
-                                                        self.n_thresholds)))
-            for t in qs:
-                m = col <= t
-                nl = int(m.sum())
-                if nl < self.min_leaf or len(y) - nl < self.min_leaf:
-                    continue
-                yl, yr = y[m], y[~m]
-                sse = float(((yl - yl.mean()) ** 2).sum()
-                            + ((yr - yr.mean()) ** 2).sum())
-                gain = parent_sse - sse
-                if gain > best[0]:
-                    best = (gain, f, float(t))
-        if best[1] < 0:
+        yc = y - y.mean()      # centering: SSE is translation-invariant and
+        parent_sse = float((yc ** 2).sum())   # the scan stays well-conditioned
+        # score every (feature, quantile-threshold) candidate in one
+        # variance-reduction pass: one batched quantile call gives the
+        # (T, F) threshold grid, a (T, n, F) <= mask gives the left-prefix
+        # counts/sums, and SSE(side) = sum(yc^2) - sum(yc)^2/n per side.
+        # The threshold grid is cast to the column dtype so the scan, the
+        # stored threshold, and the recursion partition below (a weak-
+        # promotion column-dtype comparison) all count the same prefixes.
+        # Memory is T*n*F bools per node — these baselines fit hundreds
+        # of samples.
+        Xf = X[:, feats]
+        qs = np.quantile(Xf, np.linspace(0.05, 0.95, self.n_thresholds),
+                         axis=0)                         # (T, F)
+        if np.issubdtype(Xf.dtype, np.floating):
+            qs = qs.astype(Xf.dtype)
+        le = Xf[None, :, :] <= qs[:, None, :]            # (T, n, F)
+        nl = le.sum(axis=1)
+        nr = n - nl
+        m3 = le.astype(np.float64)
+        sl = np.einsum("tnf,n->tf", m3, yc)
+        sl2 = np.einsum("tnf,n->tf", m3, yc * yc)
+        sr = yc.sum() - sl
+        sr2 = (yc * yc).sum() - sl2
+        with np.errstate(divide="ignore", invalid="ignore"):
+            sse = (sl2 - sl * sl / nl) + (sr2 - sr * sr / nr)
+        gains = np.where((nl >= self.min_leaf) & (nr >= self.min_leaf),
+                         parent_sse - sse, -np.inf)
+        # first-max in (feature-order, threshold-ascending) — the original
+        # nested-loop iteration order with its strict-> tie-break
+        k = int(np.argmax(gains.T))
+        fj, tj = divmod(k, gains.shape[0])
+        if not gains[tj, fj] > 0.0:
             return idx
-        _, f, t = best
+        f, t = int(feats[fj]), float(qs[tj, fj])
         m = X[:, f] <= t
         node = self.nodes[idx]
         node.feature, node.threshold = f, t
@@ -80,14 +95,32 @@ class RegressionTree:
         return idx
 
     def predict(self, X: np.ndarray) -> np.ndarray:
-        out = np.empty(len(X))
-        for i, x in enumerate(X):
-            n = 0
-            while self.nodes[n].feature >= 0:
-                node = self.nodes[n]
-                n = node.left if x[node.feature] <= node.threshold else node.right
-            out[i] = self.nodes[n].value
-        return out
+        """Level-synchronous batched traversal: every sample routes one
+        tree level per iteration (<= max_depth iterations total)."""
+        X = np.asarray(X)
+        feat = np.fromiter((nd.feature for nd in self.nodes), np.int64,
+                           len(self.nodes))
+        thr = np.fromiter((nd.threshold for nd in self.nodes), np.float64,
+                          len(self.nodes))
+        left = np.fromiter((nd.left for nd in self.nodes), np.int64,
+                           len(self.nodes))
+        right = np.fromiter((nd.right for nd in self.nodes), np.int64,
+                            len(self.nodes))
+        val = np.fromiter((nd.value for nd in self.nodes), np.float64,
+                          len(self.nodes))
+        if np.issubdtype(X.dtype, np.floating):
+            thr = thr.astype(X.dtype)   # weak-promotion comparison semantics
+        cur = np.zeros(len(X), np.int64)
+        rows = np.arange(len(X))
+        while True:
+            f = feat[cur]
+            inner = f >= 0
+            if not inner.any():
+                break
+            r, c = rows[inner], cur[inner]
+            go_left = X[r, f[inner]] <= thr[c]
+            cur[r] = np.where(go_left, left[c], right[c])
+        return val[cur]
 
 
 class RandomForest:

@@ -1,5 +1,6 @@
 from .cluster import Cluster  # noqa: F401
-from .simulator import SlurmSimulator, replay  # noqa: F401
+from .simulator import (SampleBatch, SlurmSimulator, replay,  # noqa: F401
+                        sample_batch)
 from .trace import (PROFILES, ClusterProfile, Job, clean_trace,  # noqa: F401
                     split_trace, synthesize_trace, trace_stats)
 from .workload import SubJobChain, pair_outcome, run_pair  # noqa: F401

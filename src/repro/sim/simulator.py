@@ -87,9 +87,39 @@ class SlurmSimulator:
         # forked sims only write Job attrs for jobs submitted post-fork
         self._forked = False
         self._tracked: set = set()
+        # job-store arrays shared copy-on-write with the fork parent
+        # (unshared on first _register)
+        self._shared_store = False
+        # no-op scheduling cache: after a pass that starts nothing, the
+        # blocking state (free nodes, head, reservation, priority-order
+        # validity horizon) lets later passes skip the full sort/backfill
+        # scan when provably nothing could start (see _schedule)
+        self._noop_free = -1
+        self._noop_qlen = 0
+        self._noop_head = -1
+        self._noop_shadow = _INF
+        self._noop_spare = 0
+        self._noop_horizon = -_INF
 
     # ------------------------------------------------------------- loading
+    def _unshare(self) -> None:
+        """First registration on a fork: take private copies of the
+        job-store arrays/containers shared copy-on-write by ``fork()``.
+        Entries the parent added after the fork (index >= our _n) are
+        pruned — they belong to the parent's timeline."""
+        n = self._n
+        self._sub = self._sub.copy()
+        self._rt = self._rt.copy()
+        self._lim = self._lim.copy()
+        self._nn = self._nn.copy()
+        self._ids = self._ids.copy()
+        self._jobs = list(self._jobs[:n])
+        self._by_id = {k: v for k, v in self._by_id.items() if v < n}
+        self._shared_store = False
+
     def _register(self, job: Job) -> int:
+        if self._shared_store:
+            self._unshare()
         i = self._n
         if i == self._cap:
             self._grow(max(2 * self._cap, i + 1))
@@ -175,6 +205,13 @@ class SlurmSimulator:
     def _next_event_time(self) -> float:
         return min(self._next_arrival(), self._next_completion())
 
+    def _queue_prio(self, idx: np.ndarray) -> np.ndarray:
+        """Multifactor priority (age + size) at the current instant."""
+        nav = max(self.cluster.n_available, 1)
+        return (AGE_WEIGHT * np.minimum((self.now - self._sub[idx])
+                                        / AGE_MAX, 1.0)
+                + SIZE_WEIGHT * self._nn[idx] / nav)
+
     def _absorb_events(self, t: float) -> None:
         """Process every arrival/completion with time <= t (no scheduling)."""
         # arrivals -> queue (append; order fixed by the next schedule pass)
@@ -186,6 +223,7 @@ class SlurmSimulator:
         # completions -> release nodes
         rn = self._run_n
         if rn and self._next_comp <= t:
+            self._noop_free = -1             # free nodes change
             done = self._run_end[:rn] <= t
             ids = self._run_i[:rn][done]
             self.cluster.release_n(int(self._nn[ids].sum()))
@@ -225,6 +263,27 @@ class SlurmSimulator:
                 break
             if _stop_idx is not None and tn == _INF and not exact:
                 return
+            # arrival-run fast-forward: absorb a whole run of arrivals up
+            # to the next completion (or t) in one event when none of them
+            # could change the schedule — trivially true with zero free
+            # nodes (every per-arrival pass would early-out), and provable
+            # via the cached blocking state otherwise (each pending
+            # arrival checked at its own submit instant)
+            if not exact and self._next_comp > tn:
+                free = self.cluster.n_free
+                tj = min(self._next_comp, t)
+                if free == 0:
+                    tn = tj
+                elif self._noop_free == free:
+                    if self._noop_horizon is None:
+                        self._compute_noop_horizon()
+                    if tj < self._noop_horizon:
+                        p = self._arr_ptr
+                        e = int(np.searchsorted(self._arr_t, tj,
+                                                side="right"))
+                        if e > p and self._noop_arrivals_blocked(
+                                self._arr_i[p:e], self._arr_t[p:e], free):
+                            tn = tj
             self.now = tn
             self._absorb_events(tn)
             if not exact:
@@ -265,6 +324,8 @@ class SlurmSimulator:
         with ``now`` advanced, never spinning in place).
         """
         idx = self._by_id.get(int(job.job_id))
+        if idx is not None and idx >= self._n:
+            idx = None      # registered on the CoW parent after our fork
         if idx is None:
             return job.wait_time if job.start_time >= 0 else float("inf")
         if self._start[idx] < 0:
@@ -275,6 +336,7 @@ class SlurmSimulator:
 
     # ------------------------------------------------------------ scheduler
     def _start_batch(self, ids: np.ndarray) -> None:
+        self._noop_free = -1                 # free nodes / running set change
         total = int(self._nn[ids].sum())
         if total > self.cluster.n_free:
             raise RuntimeError(f"allocation overflow: want {total}, "
@@ -306,6 +368,110 @@ class SlurmSimulator:
                 j.start_time = now
                 j.end_time = float(ends[k])
 
+    def _noop_still_blocked(self, new: np.ndarray, free: int) -> bool:
+        """True iff the queued-since-the-cached-pass arrivals provably
+        cannot start now nor change the cached head/reservation: none
+        backfills under the cached shadow/spare, and none sorts above the
+        cached head. Old entries were all rejected with the same free/
+        shadow/spare (their ends_ok can only degrade as time advances),
+        so the whole pass would start nothing."""
+        if not new.size:
+            return True
+        nn = self._nn[new]
+        fits = nn <= free
+        if fits.any():
+            if (self.now + self._lim[new[fits]] <= self._noop_shadow).any():
+                return False
+            if (nn[fits] <= self._noop_spare).any():
+                return False
+        h = self._noop_head
+        nav = max(self.cluster.n_available, 1)
+        prio_h = float(self._queue_prio(np.array([h]))[0])
+        prio_n = self._queue_prio(new)
+        if (prio_n > prio_h).any():
+            return False
+        eq = prio_n == prio_h
+        if eq.any():
+            s, i = self._sub[new[eq]], self._ids[new[eq]]
+            if ((s < self._sub[h])
+                    | ((s == self._sub[h]) & (i < self._ids[h]))).any():
+                return False
+        if self.now - self._sub[h] >= AGE_MAX:
+            # saturated head: the (unsaturated) newcomers keep aging, so
+            # tighten the horizon to their earliest possible overtake
+            tx = (self._sub[new] + AGE_MAX
+                  + (SIZE_WEIGHT * AGE_MAX / (AGE_WEIGHT * nav))
+                  * (self._nn[h] - nn))
+            self._noop_horizon = min(self._noop_horizon, float(tx.min()))
+        return True
+
+    def _record_noop(self, q: np.ndarray, free: int, shadow_time: float,
+                     spare: int) -> None:
+        """Cache the blocking state after a pass that started nothing.
+
+        Valid until free nodes change (completion/start) or the priority
+        ORDER against the head can change; the order-validity horizon is
+        computed lazily on the first probe (many records are invalidated
+        by the next completion without ever being probed)."""
+        self._noop_free = free
+        self._noop_qlen = int(q.size)
+        self._noop_head = int(q[0])
+        self._noop_shadow = shadow_time
+        self._noop_spare = int(spare)
+        self._noop_horizon = None
+
+    def _compute_noop_horizon(self) -> None:
+        """Earliest instant the cached priority order could change:
+        pairwise priority gaps are constant in time except across the
+        7-day age cap, so the bound is the earliest queued-job saturation
+        — and, under an already-saturated head, the earliest instant an
+        aging job could overtake the frozen head priority."""
+        q = self._q[:self._noop_qlen]
+        h = self._noop_head
+        sub_q = self._sub[q]
+        unsat = self.now - sub_q < AGE_MAX
+        horizon = float(sub_q[unsat].min() + AGE_MAX) if unsat.any() else _INF
+        if self.now - self._sub[h] >= AGE_MAX and unsat.any():
+            nav = max(self.cluster.n_available, 1)
+            tx = (sub_q[unsat] + AGE_MAX
+                  + (SIZE_WEIGHT * AGE_MAX / (AGE_WEIGHT * nav))
+                  * (self._nn[h] - self._nn[q][unsat]))
+            horizon = min(horizon, float(tx.min()))
+        self._noop_horizon = horizon
+
+    def _noop_arrivals_blocked(self, idx: np.ndarray, times: np.ndarray,
+                               free: int) -> bool:
+        """Pending-arrival variant of ``_noop_still_blocked``: each future
+        arrival is checked at its own submit instant (age zero, its own
+        ends_ok), with the head priority taken at the current — earliest —
+        time, which is conservative since the head only ages upward."""
+        nn = self._nn[idx]
+        fits = nn <= free
+        if fits.any():
+            if (times[fits] + self._lim[idx[fits]] <= self._noop_shadow).any():
+                return False
+            if (nn[fits] <= self._noop_spare).any():
+                return False
+        h = self._noop_head
+        nav = max(self.cluster.n_available, 1)
+        prio_h = float(self._queue_prio(np.array([h]))[0])
+        if (SIZE_WEIGHT * nn / nav > prio_h).any():
+            return False
+        if self.now - self._sub[h] >= AGE_MAX:
+            # under a saturated (frozen-priority) head the arrivals keep
+            # aging toward an overtake; if the earliest possible overtake
+            # falls inside the batched window itself, a sequential pass
+            # at a later arrival could behave differently — bail out to
+            # per-event processing instead of committing the jump
+            tx = (times + AGE_MAX
+                  + (SIZE_WEIGHT * AGE_MAX / (AGE_WEIGHT * nav))
+                  * (self._nn[h] - nn))
+            earliest = float(tx.min())
+            if earliest <= float(times[-1]):
+                return False
+            self._noop_horizon = min(self._noop_horizon, earliest)
+        return True
+
     def _schedule(self) -> None:
         """Priority order + EASY backfill with one head-of-line reservation."""
         self._sched_passes += 1
@@ -316,24 +482,50 @@ class SlurmSimulator:
         # recomputed on every pass, so skipping the sort here is safe
         if self.cluster.n_free == 0:
             return
-        # vectorized multifactor priority, ordered by (-prio, submit, id)
-        age = np.minimum((self.now - self._sub[q]) / AGE_MAX, 1.0)
-        size = self._nn[q] / max(self.cluster.n_available, 1)
-        prio = AGE_WEIGHT * age + SIZE_WEIGHT * size
-        q = q[np.lexsort((self._ids[q], self._sub[q], -prio))]
-        # start in priority order until the head doesn't fit
         free = self.cluster.n_free
+        # no-op fast path: same free nodes, priority order still valid,
+        # and no newcomer can start or displace the cached head
+        if self._noop_free == free and q.size >= self._noop_qlen:
+            if self._noop_horizon is None:
+                self._compute_noop_horizon()
+            if (self.now < self._noop_horizon
+                    and self._noop_still_blocked(q[self._noop_qlen:], free)):
+                self._noop_qlen = q.size
+                return
+        self._noop_free = -1
+        # vectorized multifactor priority, ordered by (-prio, submit, id)
+        q = q[np.lexsort((self._ids[q], self._sub[q], -self._queue_prio(q)))]
+        # start in priority order until the head doesn't fit
         csum = np.cumsum(self._nn[q])
         k = int(np.searchsorted(csum, free, side="right"))
         if k:
             self._start_batch(q[:k])
             q = q[k:]
-        if not q.size or not self.backfill:
+        if not q.size:
             self._q = q
+            return
+        if not self.backfill:
+            self._q = q
+            # blocked head, no backfill: arrivals can only start by
+            # outranking-and-fitting, which the noop check covers
+            self._record_noop(q, self.cluster.n_free, -_INF, -1)
+            return
+        free = self.cluster.n_free
+        if free == 0:
+            # the priority prefix consumed every node: no backfill and
+            # nothing to cache (the free==0 exits above handle probes)
+            self._q = q
+            return
+        cand = q[1:]
+        n = self._nn[cand]
+        if not cand.size or not (n <= free).any():
+            # nothing can backfill regardless of the reservation; record
+            # with an open shadow so any fitting arrival forces a full pass
+            self._q = q
+            self._record_noop(q, free, _INF, 0)
             return
         # reservation for the blocked head based on running jobs' LIMITS
         head_n = int(self._nn[q[0]])
-        free = self.cluster.n_free
         rn = self._run_n
         run = self._run_i[:rn]
         run_nn = self._nn[run]
@@ -352,12 +544,11 @@ class SlurmSimulator:
         # outlive the reservation; jobs ending by shadow_time are free.
         # The sequential scan only visits candidates that pass the
         # vectorized fit/time pre-filter, and stops once nodes run out.
-        cand = q[1:]
-        n = self._nn[cand]
         ends_ok = self.now + self._lim[cand] <= shadow_time
         viable = np.flatnonzero((n <= free) & (ends_ok | (n <= spare)))
         if not viable.size:
             self._q = q
+            self._record_noop(q, free, shadow_time, spare)
             return
         started_mask = np.zeros(cand.size, bool)
         for k in viable:
@@ -378,6 +569,7 @@ class SlurmSimulator:
             self._q = np.concatenate([q[:1], cand[~started_mask]])
         else:
             self._q = q
+            self._record_noop(q, free, shadow_time, spare)
 
     # --------------------------------------------------- boundary views
     def _job_view(self, i: int) -> Job:
@@ -409,7 +601,16 @@ class SlurmSimulator:
 
     # ------------------------------------------------------------- forking
     def fork(self) -> "SlurmSimulator":
-        """O(arrays) snapshot of the full scheduler state.
+        """Snapshot of the full scheduler state, mostly copy-on-write.
+
+        Eagerly copied: only what mutates in place as the fork runs —
+        ``_start``/``_end`` (written per job start), the running-set
+        arrays, the finished list, and the cluster counter. Shared with
+        the parent: the job-store arrays (``_sub``/``_rt``/``_lim``/
+        ``_nn``/``_ids``, written only at index >= _n by ``_register``,
+        which unshares first), ``_jobs``/``_by_id`` (same), and
+        ``_arr_t``/``_arr_i``/``_q``, which are only ever replaced
+        wholesale, never written in place.
 
         The fork shares the loaded Job objects read-only: their
         start/end attributes are no longer written by the fork (views
@@ -428,11 +629,14 @@ class SlurmSimulator:
         s._sched_passes = self._sched_passes
         s._cap = self._cap
         s._n = self._n
-        for name in ("_sub", "_rt", "_lim", "_nn", "_ids", "_start", "_end",
+        for name in ("_sub", "_rt", "_lim", "_nn", "_ids",
                      "_arr_t", "_arr_i", "_q"):
-            setattr(s, name, getattr(self, name).copy())
-        s._jobs = list(self._jobs)
-        s._by_id = dict(self._by_id)
+            setattr(s, name, getattr(self, name))
+        s._shared_store = True
+        s._start = self._start.copy()
+        s._end = self._end.copy()
+        s._jobs = self._jobs
+        s._by_id = self._by_id
         s._arr_ptr = self._arr_ptr
         s._run_i = self._run_i.copy()
         s._run_end = self._run_end.copy()
@@ -442,6 +646,14 @@ class SlurmSimulator:
         s._makespan = self._makespan
         s._forked = True
         s._tracked = set()
+        # the no-op scheduling cache references queue layout; start the
+        # fork invalidated (one extra full pass, provably same decisions)
+        s._noop_free = -1
+        s._noop_qlen = 0
+        s._noop_head = -1
+        s._noop_shadow = _INF
+        s._noop_spare = 0
+        s._noop_horizon = -_INF
         return s
 
     # ------------------------------------------------------------ metrics
@@ -468,3 +680,75 @@ def replay(jobs: Sequence[Job], n_nodes: int, mode: str = "fast",
     sim.load([dataclasses.replace(j) for j in jobs])
     sim.run_to_completion()
     return sim
+
+
+# -------------------------------------------------------- batched sampling
+@dataclasses.dataclass
+class SampleBatch:
+    """Flat-layout snapshot of B simulators (the vector-env hot path).
+
+    Ragged per-lane populations are concatenated into flat float64 arrays
+    with CSR-style offsets: lane ``b``'s queued sizes are
+    ``q_sizes[q_off[b]:q_off[b + 1]]``, in the simulator's queue order
+    (likewise the running set, in running-array order). Values match
+    ``SlurmSimulator.sample()`` exactly — same gathers off the SoA
+    arrays, minus the per-lane dict materialization.
+    """
+    times: np.ndarray        # (B,)   current simulated time per lane
+    q_count: np.ndarray      # (B,)   int64 queued-job counts
+    q_off: np.ndarray        # (B+1,) int64 offsets into the q_* flats
+    q_sizes: np.ndarray      # (Nq,)  float64 node counts
+    q_ages: np.ndarray       # (Nq,)  float64 now - submit
+    q_limits: np.ndarray     # (Nq,)  float64 wall-clock limits
+    r_count: np.ndarray      # (B,)   int64 running-job counts
+    r_off: np.ndarray        # (B+1,) int64 offsets into the r_* flats
+    r_sizes: np.ndarray      # (Nr,)  float64 node counts
+    r_elapsed: np.ndarray    # (Nr,)  float64 now - start
+    r_limits: np.ndarray     # (Nr,)  float64 wall-clock limits
+
+    @property
+    def batch(self) -> int:
+        return self.times.size
+
+
+def sample_batch(sims: Sequence[SlurmSimulator]) -> SampleBatch:
+    """Gather B simulators' queue/running populations into one flat layout.
+
+    One pair of preallocated flats per field; per lane the fill is a
+    handful of vectorized gathers straight off the SoA arrays (no dicts,
+    no per-job Python). Downstream, ``repro.core.state.encode_sample_batch``
+    turns this into the (B, 40) observation slab in one numpy pass.
+    """
+    B = len(sims)
+    times = np.empty(B)
+    q_count = np.empty(B, np.int64)
+    r_count = np.empty(B, np.int64)
+    for b, s in enumerate(sims):
+        times[b] = s.now
+        q_count[b] = s._q.size
+        r_count[b] = s._run_n
+    q_off = np.zeros(B + 1, np.int64)
+    r_off = np.zeros(B + 1, np.int64)
+    np.cumsum(q_count, out=q_off[1:])
+    np.cumsum(r_count, out=r_off[1:])
+    q_sizes = np.empty(q_off[-1])
+    q_ages = np.empty(q_off[-1])
+    q_limits = np.empty(q_off[-1])
+    r_sizes = np.empty(r_off[-1])
+    r_elapsed = np.empty(r_off[-1])
+    r_limits = np.empty(r_off[-1])
+    for b, s in enumerate(sims):
+        a, e = q_off[b], q_off[b + 1]
+        if e > a:
+            q = s._q
+            q_sizes[a:e] = s._nn[q]
+            q_ages[a:e] = times[b] - s._sub[q]
+            q_limits[a:e] = s._lim[q]
+        a, e = r_off[b], r_off[b + 1]
+        if e > a:
+            r = s._run_i[:s._run_n]
+            r_sizes[a:e] = s._nn[r]
+            r_elapsed[a:e] = times[b] - s._start[r]
+            r_limits[a:e] = s._lim[r]
+    return SampleBatch(times, q_count, q_off, q_sizes, q_ages, q_limits,
+                       r_count, r_off, r_sizes, r_elapsed, r_limits)

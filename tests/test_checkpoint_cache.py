@@ -1,0 +1,184 @@
+"""ReplayCheckpointCache: warm resets must be bit-identical to cold ones,
+the ring must evict under its memory bound, and the no-op scheduling
+cache feeding it must never change scheduling decisions.
+"""
+import numpy as np
+import pytest
+
+from repro.core import EnvConfig, ProvisionEnv, VectorProvisionEnv
+from repro.core.provisioner import ReplayCheckpointCache
+from repro.sim import replay, synthesize_trace
+import repro.sim.simulator as sim_mod
+from repro.sim.trace import V100
+
+HOUR = 3600.0
+
+
+@pytest.fixture(scope="module")
+def trace_cfg():
+    jobs = synthesize_trace(V100, months=1, seed=5, load_scale=1.0)
+    return jobs, EnvConfig(n_nodes=V100.n_nodes, history=12, interval=1800.0)
+
+
+def run_episode(venv, t_starts, policy):
+    """Reset at fixed t_starts, roll to completion; returns the full
+    observation/reward trajectory (copies — obs are served as views)."""
+    obs = venv.reset(t_starts=t_starts)
+    traj = [{k: np.array(v) for k, v in obs.items()}]
+    rewards, infos = np.zeros(venv.batch), [{}] * venv.batch
+    t = 0
+    while not venv.dones.all():
+        was = venv.dones.copy()
+        obs, r, dones, inf = venv.step([policy(t)] * venv.batch)
+        traj.append({k: np.array(v) for k, v in obs.items()})
+        for i in range(venv.batch):
+            if not was[i] and dones[i]:
+                rewards[i] = r[i]
+                infos[i] = inf[i]
+        t += 1
+    return traj, rewards, infos
+
+
+def assert_trajs_equal(a, b):
+    ta, ra, ia = a
+    tb, rb, ib = b
+    assert len(ta) == len(tb)
+    for sa, sb in zip(ta, tb):
+        for k in sa:
+            np.testing.assert_array_equal(sa[k], sb[k], err_msg=k)
+    np.testing.assert_array_equal(ra, rb)
+    assert ia == ib
+
+
+def test_warm_reset_bit_identical(trace_cfg):
+    """A reset served from a warm checkpoint ring yields bit-identical
+    observations and episode trajectories to a cold-cache reset."""
+    jobs, cfg = trace_cfg
+    env0 = ProvisionEnv(jobs, cfg, seed=0)
+    lo, hi = env0._t_start_range
+    ts = [lo + 0.6 * (hi - lo), lo + 0.25 * (hi - lo)]
+    policy = (lambda t: 1 if t >= 3 else 0)
+
+    cold_env = VectorProvisionEnv(jobs, cfg, 2, seed=0)
+    cold = run_episode(cold_env, ts, policy)
+    assert cold_env.cache.hits == 0
+
+    # same env, same t_starts again: now the ring is warm
+    warm = run_episode(cold_env, ts, policy)
+    assert cold_env.cache.hits > 0
+    assert_trajs_equal(cold, warm)
+
+    # a separate env sharing the warm cache matches a fresh cold env too
+    shared = VectorProvisionEnv(jobs, cfg, 2, seed=0,
+                                cache=cold_env.cache)
+    assert_trajs_equal(cold, run_episode(shared, ts, policy))
+
+
+def test_cache_shared_across_instances(trace_cfg):
+    jobs, cfg = trace_cfg
+    cache = ReplayCheckpointCache(jobs, cfg.n_nodes)
+    lo, hi = VectorProvisionEnv(jobs, cfg, 1, seed=0)._t_start_range
+    ts = [lo + 0.5 * (hi - lo)]
+    VectorProvisionEnv(jobs, cfg, 1, seed=0, cache=cache).reset(t_starts=ts)
+    assert cache.misses > 0
+    before = cache.misses
+    VectorProvisionEnv(jobs, cfg, 1, seed=9, cache=cache).reset(t_starts=ts)
+    assert cache.hits >= 1 and cache.misses == before
+
+
+def test_cache_eviction_under_memory_bound(trace_cfg):
+    """The ring halves its density instead of exceeding max_bytes, and a
+    bounded ring still serves bit-identical resets."""
+    jobs, cfg = trace_cfg
+    unbounded = ReplayCheckpointCache(jobs, cfg.n_nodes, interval=2 * HOUR)
+    tiny = ReplayCheckpointCache(jobs, cfg.n_nodes, interval=2 * HOUR,
+                                 max_bytes=1 << 20)
+    lo, hi = VectorProvisionEnv(jobs, cfg, 1, seed=0)._t_start_range
+    ts = [hi]                      # force a long frontier advance
+    policy = (lambda t: 1)
+
+    venv_u = VectorProvisionEnv(jobs, cfg, 1, seed=0, cache=unbounded)
+    venv_t = VectorProvisionEnv(jobs, cfg, 1, seed=0, cache=tiny)
+    a = run_episode(venv_u, ts, policy)
+    b = run_episode(venv_t, ts, policy)
+    assert len(tiny) < len(unbounded)
+    assert tiny.nbytes <= tiny.max_bytes + max(tiny._bytes)
+    assert_trajs_equal(a, b)
+    # warm resets behind the (sparser) ring still bit-identical
+    ts2 = [lo + 0.4 * (hi - lo)]
+    assert_trajs_equal(run_episode(venv_u, ts2, policy),
+                       run_episode(venv_t, ts2, policy))
+
+
+def test_noop_schedule_cache_equivalence():
+    """The no-op scheduling cache and the arrival fast-forward must not
+    change any scheduling decision: start/end times over a heavy month
+    match a reference engine with both optimizations disabled."""
+    jobs = synthesize_trace(V100, months=1, seed=3, load_scale=1.0)
+    opt = replay(jobs, V100.n_nodes, mode="fast")
+    res_opt = [(j.job_id, j.start_time, j.end_time) for j in opt.finished]
+
+    rec = sim_mod.SlurmSimulator._record_noop
+    ru = sim_mod.SlurmSimulator.run_until
+    sim_mod.SlurmSimulator._record_noop = (
+        lambda self, q, free, st, sp: None)
+
+    def run_until_ref(self, t, _stop_idx=None):
+        t = max(t, self.now)
+        exact = self.mode == "exact"
+        while True:
+            tn = self._next_event_time()
+            if exact and self._next_sched <= t and self._next_sched < tn:
+                self.now = self._next_sched
+                self._schedule()
+                self._next_sched += self.sched_interval
+                if _stop_idx is not None and self._start[_stop_idx] >= 0:
+                    return
+                continue
+            if tn > t:
+                break
+            if _stop_idx is not None and tn == float("inf") and not exact:
+                return
+            self.now = tn
+            self._absorb_events(tn)
+            if not exact:
+                self._schedule()
+            if _stop_idx is not None and self._start[_stop_idx] >= 0:
+                return
+        self.now = t
+
+    sim_mod.SlurmSimulator.run_until = run_until_ref
+    try:
+        ref = replay(jobs, V100.n_nodes, mode="fast")
+    finally:
+        sim_mod.SlurmSimulator.run_until = ru
+        sim_mod.SlurmSimulator._record_noop = rec
+    res_ref = [(j.job_id, j.start_time, j.end_time) for j in ref.finished]
+    assert res_opt == res_ref
+
+
+def test_cow_fork_isolation(trace_cfg):
+    """CoW forks must not leak registrations or starts across the split."""
+    jobs, cfg = trace_cfg
+    import copy
+    from repro.sim import SlurmSimulator
+    from repro.sim.trace import Job
+    base = SlurmSimulator(cfg.n_nodes, mode="fast")
+    base.load([copy.copy(j) for j in jobs])
+    base.run_until(jobs[0].submit_time + 5 * 24 * HOUR)
+    f1, f2 = base.fork(), base.fork()
+    n0 = base._n
+    j1 = Job(job_id=10**7 + 1, user_id=1, submit_time=f1.now,
+             runtime=HOUR, time_limit=2 * HOUR, n_nodes=1)
+    f1.submit(j1)
+    f1.run_until_started(j1)
+    assert j1.start_time >= 0
+    # f1 unshared its job store on registration; f2 and base never saw j1
+    assert f1._n == n0 + 1
+    assert base._n == n0 and f2._n == n0
+    assert j1.job_id not in base._by_id
+    assert f2._by_id is base._by_id        # still shared, untouched
+    # the forks evolve independently past the split
+    f2.run_until(f2.now + 24 * HOUR)
+    assert base.now < f2.now
+    assert f1._jobs is not base._jobs and len(base._jobs) == n0
