@@ -1,0 +1,126 @@
+"""Evaluation-grid throughput: episodes/sec of ``evaluate_batch`` at B=32
+across the full eight-method registry vs the legacy scalar ``evaluate``
+path (cache-less ProvisionEnv, one trace-head replay per reset — the cost
+model the pre-protocol evaluation loop paid).
+
+Tracked by scripts/check_bench.py (``eval_throughput``): the batched grid
+must stay >= 5x the scalar path at B=32 (ISSUE 5 acceptance). Learners
+are init-only (no training) — the benchmark measures the evaluation
+pipeline, not training quality — and every method sees the same start
+instants, so both sides do identical simulation work per episode.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict
+
+import numpy as np
+
+from repro.core import (DQNConfig, DQNLearner, EnvConfig, FoundationConfig,
+                        MiragePolicy, PGConfig, PGLearner, ProvisionEnv,
+                        ReplayCheckpointCache, TreePolicy,
+                        VectorProvisionEnv, evaluate, evaluate_batch)
+from repro.core.agent import ALL_METHODS
+from repro.core.trees import GradientBoosting, RandomForest
+from repro.sim import get_scenario
+
+from .common import emit
+
+EVAL_BATCH = 32
+SCALAR_EPISODES = 3          # per method; episodes/sec extrapolates
+BENCH_MONTHS = 3
+HISTORY = 12
+INTERVAL = 1800.0
+
+
+def _grid_policies(history: int, seed: int = 0) -> Dict[str, MiragePolicy]:
+    """All eight methods, training-free: trees fit on random summary
+    blocks, learners init-only (reduced trunks)."""
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(64, 4 * 40)).astype(np.float32)
+    y = np.abs(rng.normal(size=64)) * 3600.0
+    policies: Dict[str, MiragePolicy] = {
+        "reactive": MiragePolicy("reactive"),
+        "avg": MiragePolicy("avg"),
+    }
+    policies["avg"].avg.waits = list(y[:8])
+    for m, model in (("random_forest", RandomForest(n_trees=5, seed=seed)),
+                     ("xgboost", GradientBoosting(n_rounds=10, seed=seed))):
+        model.fit(X, y)
+        policies[m] = MiragePolicy(m, tree=TreePolicy(model, m))
+    for m in ("transformer+dqn", "transformer+pg", "moe+dqn", "moe+pg"):
+        kind = "moe" if m.startswith("moe") else "transformer"
+        fc = dataclasses.replace(FoundationConfig(kind=kind).reduced(),
+                                 kind=kind, history=history)
+        learner = (DQNLearner(fc, DQNConfig(), seed=seed)
+                   if m.endswith("dqn") else
+                   PGLearner(fc, PGConfig(), seed=seed))
+        policies[m] = MiragePolicy(m, learner=learner)
+    return policies
+
+
+def bench_eval_throughput(batch: int = EVAL_BATCH):
+    sc = get_scenario("V100", "medium", "single")
+    jobs = sc.make_trace(months=BENCH_MONTHS, seed=11)
+    policies = _grid_policies(HISTORY)
+    avg_warm = policies["avg"].avg.waits     # snapshot before any eval runs
+    cfg = sc.env_config(history=HISTORY, interval=INTERVAL)
+
+    cache = ReplayCheckpointCache(jobs, sc.profile.n_nodes)
+    venv = VectorProvisionEnv(jobs, cfg, batch, seed=0, cache=cache)
+    # warm-up pass: pays the background replay once (steady-state grid
+    # regime) and compiles each learner's jitted forward at both shapes
+    # the timed sides use (B and the scalar path's B=1)
+    evaluate_batch(venv, policies["reactive"], seed=17)
+    for m in ("transformer+dqn", "moe+dqn", "transformer+pg", "moe+pg"):
+        for b in (batch, 1):
+            policies[m].act_batch(
+                {"matrix": np.zeros((b, HISTORY, 40), np.float32)})
+
+    per_method: Dict[str, Dict] = {}
+    t_batch_total = 0.0
+    for m in ALL_METHODS:
+        t0 = time.perf_counter()
+        res = evaluate_batch(venv, policies[m], seed=17)
+        dt = time.perf_counter() - t0
+        t_batch_total += dt
+        per_method[m] = {"batch_s": dt, "batch_eps_per_s": batch / dt,
+                         "mean_interruption_h": res.mean_interruption_h}
+
+    # legacy scalar path: no cache -> every reset re-pays the trace-head
+    # replay, exactly what the pre-protocol evaluate() cost per episode.
+    # The avg window is restored to its warm snapshot so both timed sides
+    # run the same policy state (the batched pass observed 32 waits).
+    policies["avg"].avg.waits = avg_warm
+    t_scalar_total = 0.0
+    for m in ALL_METHODS:
+        env = ProvisionEnv(jobs, cfg, seed=0)
+        t0 = time.perf_counter()
+        evaluate(env, policies[m], episodes=SCALAR_EPISODES, seed=17)
+        dt = time.perf_counter() - t0
+        t_scalar_total += dt
+        per_method[m]["scalar_eps_per_s"] = SCALAR_EPISODES / dt
+
+    n_methods = len(ALL_METHODS)
+    eps_batch = n_methods * batch / t_batch_total
+    eps_scalar = n_methods * SCALAR_EPISODES / t_scalar_total
+    payload = {
+        "batch": batch,
+        "scalar_episodes_per_method": SCALAR_EPISODES,
+        "batch_episodes_per_s": eps_batch,
+        "scalar_episodes_per_s": eps_scalar,
+        "speedup_vs_scalar": eps_batch / eps_scalar,
+        "checkpoints": len(cache),
+        "checkpoint_mb": cache.nbytes / 2**20,
+        "per_method": per_method,
+        "target": ">=5x batched grid episodes/sec at B=32",
+    }
+    emit("eval_throughput", t_batch_total / (n_methods * batch) * 1e6,
+         f"grid batch={eps_batch:.1f} scalar={eps_scalar:.2f} eps/s "
+         f"speedup={eps_batch/eps_scalar:.1f}x (target >=5x)", payload)
+    return payload
+
+
+def run():
+    bench_eval_throughput()

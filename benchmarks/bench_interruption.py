@@ -9,49 +9,45 @@ qualitatively: same orderings and bands on the calibrated synthetic traces
 """
 from __future__ import annotations
 
-import dataclasses
 import time
-from typing import Dict, List
+from typing import Dict
 
 import numpy as np
 
-from repro.core import EnvConfig, ProvisionEnv, build_policy, evaluate
+from repro.core import build_policy, evaluate_batch
 from repro.core.agent import ALL_METHODS
 from repro.core.provisioner import collect_offline_samples
-from repro.sim import synthesize_trace
-from repro.sim.trace import A100, RTX, V100
+from repro.sim.scenarios import LOAD_LEVELS, iter_scenarios
 
-from .common import (EPISODES, HISTORY, INTERVAL, LOAD_LEVELS,
-                     OFFLINE_EPISODES, ONLINE_EPISODES, PRETRAIN_EPOCHS,
-                     TRACE_MONTHS, emit)
+from .common import (EPISODES, HISTORY, INTERVAL, OFFLINE_EPISODES,
+                     ONLINE_EPISODES, PRETRAIN_EPOCHS, TRACE_MONTHS, emit)
 
-CLUSTERS = {"V100": V100, "RTX": RTX, "A100": A100}
 RL_TRAIN_LOAD = "heavy"
-
-
-def _make_env(profile, load: float, n_nodes_chain: int, seed: int):
-    jobs = synthesize_trace(profile, months=TRACE_MONTHS, seed=seed,
-                            load_scale=load)
-    cfg = EnvConfig(n_nodes=profile.n_nodes, history=HISTORY,
-                    interval=INTERVAL, chain_nodes=n_nodes_chain)
-    return ProvisionEnv(jobs, cfg, seed=seed)
 
 
 def run_grid(chain_nodes: int, methods=ALL_METHODS,
              clusters=("V100", "RTX", "A100")) -> Dict:
-    """One Fig-8/9-style grid: trains the learned methods on the heavy
-    trace (train seed), evaluates every method per load level (val seed)."""
+    """One Fig-8/9-style grid over the scenario registry: trains the
+    learned methods on the heavy-load scenario (train seed), then runs
+    ``evaluate_batch`` per (load scenario x method) — EPISODES lockstep
+    lanes per cell sharing one ReplayCheckpointCache per validation
+    trace (val seed)."""
     results: Dict[str, Dict] = {}
     for cname in clusters:
-        profile = CLUSTERS[cname]
         t0 = time.time()
-        env_train = _make_env(profile, LOAD_LEVELS[RL_TRAIN_LOAD],
-                              chain_nodes, seed=100)
+        # with_chain_nodes keeps arbitrary chain sizes working (registered
+        # shapes resolve to their grid cell, others get an ad-hoc variant)
+        cells = [sc.with_chain_nodes(chain_nodes) for sc in
+                 iter_scenarios(clusters=[cname], chains=["single"])]
+        env_train = next(sc for sc in cells
+                         if sc.load == RL_TRAIN_LOAD).make_env(
+            months=TRACE_MONTHS, seed=100, history=HISTORY, interval=INTERVAL)
         # offline samples span ALL load regimes (the real traces mix loads
         # month to month, §3.1) so the wait regressors see light queues too
         samples = []
-        for li, (lname, scale) in enumerate(LOAD_LEVELS.items()):
-            env_l = _make_env(profile, scale, chain_nodes, seed=100 + li)
+        for li, sc in enumerate(cells):
+            env_l = sc.make_env(months=TRACE_MONTHS, seed=100 + li,
+                                history=HISTORY, interval=INTERVAL)
             samples += collect_offline_samples(
                 env_l, n_episodes=max(OFFLINE_EPISODES // len(LOAD_LEVELS), 1),
                 n_points=5, seed=1 + li)
@@ -63,12 +59,15 @@ def run_grid(chain_nodes: int, methods=ALL_METHODS,
                 pretrain_epochs=PRETRAIN_EPOCHS, history=HISTORY,
                 reduced=True, seed=0)
         t_train = time.time() - t0
-        for lname, scale in LOAD_LEVELS.items():
-            env_val = _make_env(profile, scale, chain_nodes, seed=200)
+        for sc in cells:
+            # one vector env per scenario cell, reused across methods:
+            # all methods share the warm background-replay checkpoints
+            venv = sc.make_vector_env(EPISODES, months=TRACE_MONTHS,
+                                      seed=200, history=HISTORY,
+                                      interval=INTERVAL)
             for m in methods:
-                res = evaluate(env_val, policies[m], episodes=EPISODES,
-                               seed=7)
-                results.setdefault(cname, {}).setdefault(lname, {})[m] = \
+                res = evaluate_batch(venv, policies[m], seed=7)
+                results.setdefault(cname, {}).setdefault(sc.load, {})[m] = \
                     res.summary()
         results[cname]["train_wall_s"] = t_train
     return results

@@ -22,7 +22,8 @@ HISTORY = 24 if QUICK else 144
 INTERVAL = 1800.0 if QUICK else 600.0
 TRACE_MONTHS = 1 if QUICK else 4
 
-LOAD_LEVELS = {"light": 0.45, "medium": 0.8, "heavy": 1.05}
+# single source of truth for load regimes: the scenario registry
+from repro.sim.scenarios import LOAD_LEVELS  # noqa: E402,F401
 
 
 def timed(fn: Callable, *args, repeats: int = 1, **kw):

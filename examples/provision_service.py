@@ -2,20 +2,21 @@
 through a busy batch cluster with Mirage deciding successor submissions.
 
 Timeline (all simulated except the payload training, which really runs):
-  1. synthesize a heavy V100-like month and train Mirage's provisioner
-     (offline pretraining + online DQN) on the 80% training split;
+  1. pick a scenario from the registry (V100 / heavy / single-node chain),
+     synthesize its trace, and train Mirage's provisioner (offline
+     pretraining + online DQN);
   2. the service = a chain of sub-jobs; each simulated sub-job interval
      runs REAL payload training steps and checkpoints (repro.train.chain);
   3. at each 10-min tick the agent decides submit / no-submit for the
-     successor; on the predecessor's limit the payload checkpoints and the
-     successor resumes from it;
-  4. report interruption/overlap vs the reactive baseline and the payload's
-     training continuity (steps lost = 0).
+     successor via the Policy protocol's scalar ``act`` adapter; on the
+     predecessor's limit the payload checkpoints and the successor resumes;
+  4. close with a batched sweep: ``evaluate_batch`` runs the method and the
+     reactive baseline over lockstep episode lanes sharing one
+     ReplayCheckpointCache, reporting interruption reduction.
 
 Usage: PYTHONPATH=src python examples/provision_service.py [--episodes 3]
 """
 import argparse
-import dataclasses
 import shutil
 import tempfile
 import time
@@ -26,25 +27,27 @@ import numpy as np
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--episodes", type=int, default=3)
+    ap.add_argument("--eval-lanes", type=int, default=6,
+                    help="lockstep lanes in the closing evaluate_batch sweep")
     ap.add_argument("--method", default="moe+dqn",
                     choices=["moe+dqn", "transformer+dqn", "transformer+pg",
                              "avg", "reactive", "random_forest", "xgboost"])
     args = ap.parse_args()
 
-    import jax
-    from repro.core import EnvConfig, ProvisionEnv, build_policy, evaluate
+    from repro.core import (ReplayCheckpointCache, build_policy,
+                            evaluate_batch)
     from repro.core.provisioner import collect_offline_samples
     from repro.data import DataConfig, data_iterator
     from repro.models import registry
-    from repro.sim import split_trace, synthesize_trace
-    from repro.sim.trace import V100
+    from repro.sim import get_scenario
     from repro.train import ChainConfig, ChainedTrainer, OptimizerConfig
 
     print("=== Mirage-provisioned training service ===")
-    jobs = synthesize_trace(V100, months=1, seed=42, load_scale=1.0)
-    train_jobs, val_jobs = split_trace(jobs, 0.8)
-    env = ProvisionEnv(jobs, EnvConfig(n_nodes=V100.n_nodes, history=24,
-                                       interval=1800.0), seed=0)
+    sc = get_scenario("V100", "heavy", "single")
+    jobs = sc.make_trace(months=1, seed=42)
+    cache = ReplayCheckpointCache(jobs, sc.profile.n_nodes)
+    env = sc.make_env(trace=jobs, seed=0, history=24, interval=1800.0,
+                      cache=cache)
 
     t0 = time.time()
     samples = collect_offline_samples(env, n_episodes=4, n_points=5, seed=1)
@@ -53,7 +56,7 @@ def main():
                           online_episodes=6, pretrain_epochs=5,
                           history=24, reduced=True, seed=0)
     reactive = build_policy("reactive", env)
-    print(f"trained {args.method} ({time.time()-t0:.0f}s)")
+    print(f"trained {args.method} on {sc.name} ({time.time()-t0:.0f}s)")
 
     # payload: real training chained across the provisioned sub-jobs
     cfg = registry.get_config("tinyllama-1.1b", smoke=True)
@@ -61,35 +64,32 @@ def main():
     ckpt_dir = tempfile.mkdtemp(prefix="mirage_service_")
     dc = DataConfig(batch=4, seq_len=32)
 
-    outcomes = {"mirage": [], "reactive": []}
     total_steps = 0
     for ep in range(args.episodes):
-        for name, pol in (("mirage", policy), ("reactive", reactive)):
-            obs = env.reset(t_start=None)
-            if name == "mirage":
-                # sub-job J_k trains while its simulated job "runs"
-                trainer = ChainedTrainer(
-                    cfg, ocfg, ChainConfig(ckpt_dir=ckpt_dir, ckpt_every=10),
-                    data_iterator(cfg, dc, start_step=total_steps), seed=ep)
-                trainer.maybe_resume()
-                info = trainer.run_subjob(10)
-                total_steps = info["steps_done"]
-            done, r, outcome = False, 0.0, {}
-            while not done:
-                a = pol.act(obs)
-                obs, r, done, outcome = env.step(a)
-            outcomes[name].append(outcome)
-            if name == "mirage":
-                print(f"  ep{ep} payload@step {total_steps}: "
-                      f"{outcome['kind']} {outcome['amount_s']/3600:.1f}h "
-                      f"(wait {outcome['wait_s']/3600:.1f}h)")
+        obs = env.reset(t_start=None)
+        # sub-job J_k trains while its simulated job "runs"
+        trainer = ChainedTrainer(
+            cfg, ocfg, ChainConfig(ckpt_dir=ckpt_dir, ckpt_every=10),
+            data_iterator(cfg, dc, start_step=total_steps), seed=ep)
+        trainer.maybe_resume()
+        info = trainer.run_subjob(10)
+        total_steps = info["steps_done"]
+        done, outcome = False, {}
+        while not done:
+            a = policy.act(obs)        # Policy protocol's scalar adapter
+            obs, r, done, outcome = env.step(a)
+        print(f"  ep{ep} payload@step {total_steps}: "
+              f"{outcome['kind']} {outcome['amount_s']/3600:.1f}h "
+              f"(wait {outcome['wait_s']/3600:.1f}h)")
 
-    def mean_interrupt(rows):
-        arr = [o["amount_s"] / 3600 for o in rows if o["kind"] == "interrupt"]
-        return float(np.mean(arr)) if arr else 0.0
-
-    mi, mr = mean_interrupt(outcomes["mirage"]), mean_interrupt(outcomes["reactive"])
-    print(f"mean interruption: {args.method}={mi:.1f}h reactive={mr:.1f}h "
+    # batched sweep off the same warm cache: method vs reactive baseline
+    venv = sc.make_vector_env(args.eval_lanes, trace=jobs, seed=0,
+                              history=24, interval=1800.0, cache=cache)
+    res = evaluate_batch(venv, policy, seed=7)
+    base = evaluate_batch(venv, reactive, seed=7)
+    mi, mr = res.mean_interruption_h, base.mean_interruption_h
+    print(f"[{args.eval_lanes}-lane sweep] mean interruption: "
+          f"{args.method}={mi:.1f}h reactive={mr:.1f}h "
           f"(reduction {100*(mr-mi)/max(mr,1e-9):.0f}%)")
     print(f"payload training steps preserved across sub-jobs: {total_steps} "
           f"(0 lost — successor resumed from checkpoint each time)")

@@ -17,18 +17,24 @@ import numpy as np
 
 
 def control_plane_demo():
-    from repro.core import EnvConfig, ProvisionEnv, build_policy, evaluate
-    from repro.sim import synthesize_trace, trace_stats
-    from repro.sim.trace import V100
+    from repro.core import ReplayCheckpointCache, build_policy, evaluate_batch
+    from repro.sim import get_scenario, trace_stats
 
     print("=== control plane: Mirage provisioning on a V100-like cluster ===")
-    jobs = synthesize_trace(V100, months=1, seed=0, load_scale=1.0)
-    print("trace:", {k: round(v, 2) for k, v in trace_stats(jobs).items()})
-    env = ProvisionEnv(jobs, EnvConfig(n_nodes=V100.n_nodes, history=24,
-                                       interval=1800.0), seed=0)
+    # scenarios name the §6 evaluation grid: cluster / load level / chain
+    sc = get_scenario("V100", "heavy", "single")
+    jobs = sc.make_trace(months=1, seed=0)
+    print(f"scenario {sc.name}:",
+          {k: round(v, 2) for k, v in trace_stats(jobs).items()})
+    # one checkpoint cache shares the background replay across policies
+    cache = ReplayCheckpointCache(jobs, sc.profile.n_nodes)
+    env = sc.make_env(trace=jobs, seed=0, history=24, interval=1800.0,
+                      cache=cache)
+    venv = sc.make_vector_env(4, trace=jobs, seed=0, history=24,
+                              interval=1800.0, cache=cache)
     for method in ("reactive", "avg"):
-        pol = build_policy(method, env)
-        res = evaluate(env, pol, episodes=4, seed=1)
+        pol = build_policy(method, env)      # every method is a Policy:
+        res = evaluate_batch(venv, pol, seed=1)   # 4 episodes in lockstep
         print(f"{method:9s} -> {res.summary()}")
 
 

@@ -38,6 +38,10 @@ TRACKED = {
         "suite": "simulator",
         "metrics": {"sim_months_per_wallclock_min": "up"},
     },
+    "eval_throughput": {
+        "suite": "eval throughput",
+        "metrics": {"batch_episodes_per_s": "up", "speedup_vs_scalar": "up"},
+    },
 }
 
 BASELINE_DIR = ROOT / "experiments" / "bench"

@@ -1,14 +1,19 @@
 """Mirage core: the paper's contribution — RL-based proactive provisioning."""
 from .agent import (ALL_METHODS, DEFAULT_METHOD, EvalResult,  # noqa: F401
-                    MiragePolicy, build_policy, evaluate,
-                    pretrain_foundation, train_online_dqn, train_online_pg)
+                    LearnerPolicy, MiragePolicy, build_policy, evaluate,
+                    evaluate_batch, pretrain_foundation, train_online_dqn,
+                    train_online_pg)
+from .baselines import (AvgWaitPolicy, ReactivePolicy,  # noqa: F401
+                        TreePolicy)
 from .dqn import DQNConfig, DQNLearner  # noqa: F401
 from .foundation import FoundationConfig, init_foundation, q_values  # noqa: F401
 from .pg import PGConfig, PGLearner  # noqa: F401
+from .policy import Policy, batch_obs  # noqa: F401
 from .provisioner import (EnvConfig, ProvisionEnv,  # noqa: F401
                           ReplayCheckpointCache, VectorProvisionEnv,
                           collect_offline_samples)
 from .replay import ReplayBuffer  # noqa: F401
 from .reward import RewardConfig, shape_reward  # noqa: F401
 from .state import (STATE_DIM, StateHistory, StateHistoryBatch,  # noqa: F401
-                    encode_sample_batch, encode_snapshot, encode_snapshots)
+                    encode_sample_batch, encode_snapshot, encode_snapshots,
+                    summary_features, summary_features_batch)

@@ -2,12 +2,19 @@
 
 Ties together the foundation models, the DQN / PG learners, the heuristic
 and tree baselines, offline pretraining (§4.9.1) and online on-policy
-training (§4.9.2), plus the evaluation loop used by the §6 benchmarks.
+training (§4.9.2), plus the batched evaluation loop used by the §6
+benchmarks.
 
 Method registry (the paper's eight): reactive, avg, random_forest,
 xgboost(-style GBDT), transformer+DQN, transformer+PG, MoE+DQN, MoE+PG.
 Mirage's default is MoE+DQN; transformer+PG is the aggressive option
 (§6.3).
+
+Every method is a ``Policy`` (repro.core.policy): ``act_batch`` over the
+vector env's batched obs dict, plus the ``reset_lanes`` / ``observe``
+hooks. ``evaluate_batch`` rolls B lockstep episodes off one shared
+ReplayCheckpointCache; the scalar ``evaluate`` survives one release as a
+B=1 forwarding shim.
 """
 from __future__ import annotations
 
@@ -24,6 +31,7 @@ from .dqn import DQNConfig, DQNLearner
 from .foundation import (FoundationConfig, init_foundation, q_values,
                          reward_prediction)
 from .pg import PGConfig, PGLearner
+from .policy import Policy
 from .provisioner import (ProvisionEnv, ReplayCheckpointCache,
                           VectorProvisionEnv, collect_offline_samples)
 from .replay import ReplayBuffer
@@ -113,7 +121,7 @@ def train_online_dqn(env: ProvisionEnv, learner: DQNLearner,
     buf = ReplayBuffer(replay_capacity, learner.fc.history, STATE_DIM, seed)
     returns: List[float] = []
     B = batch or min(episodes, 8)
-    cache = ReplayCheckpointCache(env.trace, env.cfg.n_nodes)
+    cache = env.cache or ReplayCheckpointCache(env.trace, env.cfg.n_nodes)
     while len(returns) < episodes:
         b = min(B, episodes - len(returns))
         venv = VectorProvisionEnv(env.trace, env.cfg, b,
@@ -136,7 +144,7 @@ def train_online_pg(env: ProvisionEnv, learner: PGLearner,
                     batch: Optional[int] = None) -> List[float]:
     returns: List[float] = []
     B = batch or min(episodes, 8)
-    cache = ReplayCheckpointCache(env.trace, env.cfg.n_nodes)
+    cache = env.cache or ReplayCheckpointCache(env.trace, env.cfg.n_nodes)
     while len(returns) < episodes:
         b = min(B, episodes - len(returns))
         venv = VectorProvisionEnv(env.trace, env.cfg, b,
@@ -180,8 +188,24 @@ class EvalResult:
                 "n_episodes": len(self.interruptions_h) + len(self.overlaps_h)}
 
 
-class MiragePolicy:
-    """Uniform .act(obs) wrapper around any of the eight methods."""
+class LearnerPolicy(Policy):
+    """RL learner (DQN / PG) as an evaluation Policy: one jitted forward
+    decides the whole batch, exploration off (§4.4 serving mode)."""
+
+    def __init__(self, method: str, learner):
+        self.method = method
+        self.learner = learner
+
+    def act_batch(self, obs: Dict) -> np.ndarray:
+        return self.learner.act_batch(np.asarray(obs["matrix"]),
+                                      explore=False)
+
+
+class MiragePolicy(Policy):
+    """Deprecated constructor shim (one release): builds the right Policy
+    for ``method`` and delegates the protocol to it. Prefer the concrete
+    Policy classes (ReactivePolicy, AvgWaitPolicy, TreePolicy,
+    LearnerPolicy) or ``build_policy``."""
 
     def __init__(self, method: str, learner=None, tree=None, avg=None):
         self.method = method
@@ -189,36 +213,126 @@ class MiragePolicy:
         self.tree = tree
         self.avg = avg or AvgWaitPolicy()
         self.reactive = ReactivePolicy()
-
-    def act(self, obs: Dict) -> int:
-        if self.method == "reactive":
-            return self.reactive.act(obs)
-        if self.method == "avg":
-            return self.avg.act(obs)
-        if self.method in ("random_forest", "xgboost"):
-            return self.tree.act(obs)
-        return self.learner.act(obs["matrix"], explore=False)
-
-
-def evaluate(env: ProvisionEnv, policy: MiragePolicy, episodes: int = 20,
-             seed: int = 0) -> EvalResult:
-    rng = np.random.default_rng(seed)
-    lo, hi = env._t_start_range
-    starts = rng.uniform(lo, hi, episodes)
-    res = EvalResult(policy.method, [], [], [])
-    for t0 in starts:
-        obs = env.reset(t_start=float(t0))
-        done, info = False, {}
-        while not done:
-            a = policy.act(obs)
-            obs, r, done, info = env.step(a)
-        if info.get("kind") == "interrupt":
-            res.interruptions_h.append(info["amount_s"] / HOUR)
+        if method == "reactive":
+            self._inner: Policy = self.reactive
+        elif method == "avg":
+            self._inner = self.avg
+        elif method in ("random_forest", "xgboost"):
+            self._inner = tree
         else:
-            res.overlaps_h.append(info["amount_s"] / HOUR)
-        res.waits_h.append(info.get("wait_s", 0.0) / HOUR)
-        if policy.method == "avg":
-            policy.avg.observe_wait(info.get("wait_s", 0.0))
+            self._inner = LearnerPolicy(method, learner)
+
+    def act_batch(self, obs: Dict) -> np.ndarray:
+        return self._inner.act_batch(obs)
+
+    def reset_lanes(self, mask: np.ndarray) -> None:
+        self._inner.reset_lanes(mask)
+
+    def observe(self, infos: List[Optional[Dict]]) -> None:
+        self._inner.observe(infos)
+
+
+def _policy_method(policy) -> str:
+    return getattr(policy, "method", getattr(policy, "name", "policy"))
+
+
+class _ScalarActAdapter(Policy):
+    """Back-compat (one release, like the ``evaluate`` shim): lifts a
+    pre-protocol duck-typed policy exposing only ``act(obs)`` into the
+    batched protocol, one lane at a time."""
+
+    def __init__(self, inner):
+        self._inner = inner
+        self.method = _policy_method(inner)
+
+    def act_batch(self, obs: Dict) -> np.ndarray:
+        B = len(np.asarray(obs["pred_remaining"]))
+        return np.asarray(
+            [int(self._inner.act({k: v[i] for k, v in obs.items()}))
+             for i in range(B)], np.int64)
+
+
+def evaluate_batch(venv: VectorProvisionEnv, policy: Policy,
+                   episodes: Optional[int] = None, seed: int = 0,
+                   t_starts: Optional[Sequence[float]] = None) -> EvalResult:
+    """Batched evaluation: lockstep B-lane episodes off one shared
+    ReplayCheckpointCache.
+
+    Episode start instants are one uniform draw over the env's start
+    range (``rng(seed).uniform(lo, hi, episodes)`` — the same sequence
+    the scalar loop drew), or ``t_starts`` verbatim. They are processed
+    in chunks of ``venv.batch`` lanes; a shorter tail chunk runs on a
+    tail-sized env sharing ``venv``'s cache. Per-lane accounting matches
+    the scalar loop (result order == start-instant order) because lane
+    ``i`` is bit-identical to a scalar env seeded ``venv.seed + i``.
+
+    Policy hooks: ``reset_lanes`` fires when a chunk begins;
+    ``observe(infos)`` fires once per finished chunk with the B final
+    infos — so within a chunk every lane acts under the same policy
+    state (stateful policies like ``avg`` update between chunks, exactly
+    like the B=1 scalar shim updates between episodes).
+    """
+    if t_starts is None:
+        episodes = venv.batch if episodes is None else int(episodes)
+        lo, hi = venv._t_start_range
+        t_starts = np.random.default_rng(seed).uniform(lo, hi, episodes)
+    t_starts = np.asarray(t_starts, np.float64)
+    res = EvalResult(_policy_method(policy), [], [], [])
+    for c0 in range(0, len(t_starts), venv.batch):
+        chunk = t_starts[c0:c0 + venv.batch]
+        v = venv
+        if len(chunk) != venv.batch:          # tail chunk: smaller env,
+            v = VectorProvisionEnv(venv.trace, venv.cfg, len(chunk),
+                                   seed=venv.seed, cache=venv.cache)
+        obs = v.reset(t_starts=chunk)
+        policy.reset_lanes(np.ones(v.batch, bool))
+        finals: List[Optional[Dict]] = [None] * v.batch
+        while not v.dones.all():
+            acts = policy.act_batch(obs)
+            live = ~v.dones
+            obs, r, dones, infos = v.step(acts)
+            for i in np.flatnonzero(live & dones):
+                finals[int(i)] = infos[int(i)]
+        for info in finals:
+            if info.get("kind") == "interrupt":
+                res.interruptions_h.append(info["amount_s"] / HOUR)
+            else:
+                res.overlaps_h.append(info["amount_s"] / HOUR)
+            res.waits_h.append(info.get("wait_s", 0.0) / HOUR)
+        policy.observe(finals)
+    return res
+
+
+def evaluate(env: ProvisionEnv, policy: Policy, episodes: int = 20,
+             seed: int = 0,
+             t_starts: Optional[Sequence[float]] = None) -> EvalResult:
+    """Deprecated scalar loop (one release): forwards to ``evaluate_batch``
+    with B=1 semantics — one lane, one chunk per episode, so
+    ``policy.observe`` fires after every episode exactly like the legacy
+    per-episode ``observe_wait`` plumbing. With ``env.cache`` set the lane
+    forks warm from it across episodes; without one, a single-use cache
+    with checkpointing disabled stands in, so every episode still pays a
+    trace-head replay like the legacy loop (attach a ReplayCheckpointCache
+    via ``ProvisionEnv(..., cache=...)`` to stop re-paying it). Either way
+    one lane env serves the whole call, so the per-episode chain draws
+    advance one rng stream — outcomes are identical across both branches."""
+    if not hasattr(policy, "act_batch"):      # pre-protocol act-only duck
+        policy = _ScalarActAdapter(policy)
+    if t_starts is None:
+        lo, hi = env._t_start_range
+        t_starts = np.random.default_rng(seed).uniform(lo, hi, episodes)
+    res = EvalResult(_policy_method(policy), [], [], [])
+    cache = env.cache
+    if cache is None:
+        cache = ReplayCheckpointCache(env.trace, env.cfg.n_nodes,
+                                      interval=float("inf"))
+    venv = VectorProvisionEnv(env.trace, env.cfg, 1, seed=env.seed,
+                              cache=cache)
+    for t0 in np.asarray(t_starts, np.float64):
+        part = evaluate_batch(venv, policy, t_starts=[t0])
+        res.interruptions_h += part.interruptions_h
+        res.overlaps_h += part.overlaps_h
+        res.waits_h += part.waits_h
     return res
 
 
@@ -253,5 +367,5 @@ def build_policy(method: str, env: ProvisionEnv,
         train_online_dqn(env, learner, episodes=online_episodes, seed=seed)
     else:
         learner = PGLearner(fc, PGConfig(), seed=seed, params=params)
-        train_online_pg(env, learner, episodes=online_episodes)
+        train_online_pg(env, learner, episodes=online_episodes, seed=seed)
     return MiragePolicy(method, learner=learner)

@@ -74,11 +74,9 @@ class DQNLearner:
     # ----------------------------------------------------------- serving
     def act(self, state_matrix: np.ndarray, explore: bool = True) -> int:
         """Deterministic policy (§4.4): submit iff Q(submit) > Q(no-submit);
-        ε-greedy exploration during online training."""
-        if explore and self.rng.random() < self.dc.epsilon:
-            return int(self.rng.integers(0, 2))
-        q = self._q_fn(self.params, jnp.asarray(state_matrix[None]))
-        return int(jnp.argmax(q[0]))
+        ε-greedy exploration during online training. B=1 view of
+        ``act_batch`` — one code path serves both."""
+        return int(self.act_batch(state_matrix[None], explore=explore)[0])
 
     def act_batch(self, state_matrices: np.ndarray,
                   explore: bool = True) -> np.ndarray:

@@ -62,13 +62,9 @@ class PGLearner:
 
     # ----------------------------------------------------------- serving
     def act(self, state_matrix: np.ndarray, explore: bool = True) -> int:
-        """Sample from the output binomial distribution (§4.4)."""
-        logits = self._logits_fn(self.params,
-                                 jnp.asarray(state_matrix[None]))[0]
-        p = np.asarray(jax.nn.softmax(logits))
-        if explore:
-            return int(self.rng.choice(2, p=p))
-        return int(np.argmax(p))
+        """Sample from the output binomial distribution (§4.4). B=1 view
+        of ``act_batch`` — one code path serves both."""
+        return int(self.act_batch(state_matrix[None], explore=explore)[0])
 
     def act_batch(self, state_matrices: np.ndarray,
                   explore: bool = True) -> np.ndarray:

@@ -1,0 +1,52 @@
+"""The unified batched Policy protocol (§6 evaluation matrix).
+
+Every provisioning method — heuristics, tree regressors, RL learners —
+implements one interface:
+
+* ``act_batch(obs) -> (B,) int64 actions`` over a batched observation
+  dict (the ``VectorProvisionEnv`` field set: ``matrix`` (B, k, 40),
+  ``summary`` (B, 4*40), ``pred_remaining`` (B,), ``time_pos`` (B,));
+* ``reset_lanes(mask)`` — called when the masked lanes begin a fresh
+  episode (hook for per-lane policy state; stateless policies ignore it);
+* ``observe(infos)`` — called once per evaluation chunk with the B
+  episode-final info dicts (``kind``/``amount_s``/``wait_s``), subsuming
+  the ad-hoc ``observe_wait`` plumbing the scalar loop used to thread by
+  hand for the ``avg`` heuristic.
+
+The scalar ``act(obs)`` adapter lifts a single-episode observation dict
+to a B=1 batch, so interactive callers (examples stepping one episode by
+hand) keep a one-line interface while every policy runs the same batched
+code path.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+def batch_obs(obs: Dict) -> Dict:
+    """Lift a scalar observation dict to a B=1 batched one."""
+    return {k: np.asarray(v)[None] for k, v in obs.items()}
+
+
+class Policy:
+    """Base class of the batched policy protocol."""
+
+    #: method-registry name reported in EvalResult (subclasses override)
+    method: str = "policy"
+
+    def act_batch(self, obs: Dict) -> np.ndarray:
+        """Batched decision: obs dict with (B, ...) fields -> (B,) int64
+        actions (1 = submit the successor, 0 = wait)."""
+        raise NotImplementedError
+
+    def reset_lanes(self, mask: np.ndarray) -> None:
+        """The masked lanes are starting a fresh episode."""
+
+    def observe(self, infos: List[Optional[Dict]]) -> None:
+        """Episode-final infos for a finished evaluation chunk."""
+
+    def act(self, obs: Dict) -> int:
+        """Scalar adapter: one episode's obs dict -> one action."""
+        return int(self.act_batch(batch_obs(obs))[0])

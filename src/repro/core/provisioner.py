@@ -50,7 +50,7 @@ from repro.sim.workload import SubJobChain, pair_outcome
 from .reward import RewardConfig, shape_reward
 from .state import (SAMPLE_INTERVAL, STATE_DIM, StateHistory,
                     StateHistoryBatch, encode_sample_batch, encode_snapshot,
-                    summary_features, summary_offsets)
+                    summary_features, summary_features_batch)
 
 HOUR = 3600.0
 DAY = 24 * HOUR
@@ -70,9 +70,12 @@ class EnvConfig:
 class ProvisionEnv:
     """One predecessor-successor pair per episode (§4.1's P/S protocol)."""
 
-    def __init__(self, trace: Sequence[Job], cfg: EnvConfig, seed: int = 0):
+    def __init__(self, trace: Sequence[Job], cfg: EnvConfig, seed: int = 0,
+                 cache: Optional["ReplayCheckpointCache"] = None):
         self.trace = trace
         self.cfg = cfg
+        self.seed = seed
+        self.cache = cache
         self.rng = np.random.default_rng(seed)
         self.sim: Optional[SlurmSimulator] = None
         self.hist: Optional[StateHistory] = None
@@ -128,8 +131,14 @@ class ProvisionEnv:
     def reset(self, t_start: Optional[float] = None) -> Dict:
         lo, hi = self._t_start_range
         t0 = t_start if t_start is not None else float(self.rng.uniform(lo, hi))
-        sim = SlurmSimulator(self.cfg.n_nodes, mode="fast")
-        sim.load([copy.copy(j) for j in self.trace])
+        if self.cache is not None:
+            # warm path: fork the shared background replay at the window
+            # head instead of re-replaying the trace from t=0 (checkpoint
+            # forks are bit-identical to a fresh replay — cache contract)
+            sim = self.cache.fork_at(self.warmup_point(t0))
+        else:
+            sim = SlurmSimulator(self.cfg.n_nodes, mode="fast")
+            sim.load([copy.copy(j) for j in self.trace])
         return self._begin_episode(sim, t0)
 
     def _begin_episode(self, sim: SlurmSimulator, t0: float) -> Dict:
@@ -314,6 +323,7 @@ class VectorProvisionEnv:
         self.trace = trace
         self.cfg = cfg
         self.batch = batch
+        self.seed = seed
         self.envs = [ProvisionEnv(trace, cfg, seed=seed + i)
                      for i in range(batch)]
         self.cache = cache if cache is not None else ReplayCheckpointCache(
@@ -370,14 +380,7 @@ class VectorProvisionEnv:
         if not lanes.size:
             return
         self._hist.matrix_into(self._mat, lanes)
-        mat, k = self._mat, self.cfg.history
-        i1, i6, i24 = summary_offsets(k)
-        cur = mat[lanes, k - 1]
-        S = self._summary
-        S[lanes, 0:STATE_DIM] = cur
-        S[lanes, STATE_DIM:2 * STATE_DIM] = cur - mat[lanes, i1]
-        S[lanes, 2 * STATE_DIM:3 * STATE_DIM] = cur - mat[lanes, i6]
-        S[lanes, 3 * STATE_DIM:4 * STATE_DIM] = cur - mat[lanes, i24]
+        summary_features_batch(self._mat, lanes, self._summary)
         nows = np.fromiter((self.envs[int(i)].sim.now for i in lanes),
                            np.float64, lanes.size)
         started = self._pred_start[lanes] >= 0
@@ -502,7 +505,7 @@ def collect_offline_samples(env: ProvisionEnv, n_episodes: int,
     lanes = [(ep, p) for ep in range(n_episodes) for p in range(n_points)]
     out: List[Optional[Dict]] = [None] * len(lanes)
     B = batch or min(len(lanes), 32)
-    cache = ReplayCheckpointCache(env.trace, env.cfg.n_nodes)
+    cache = env.cache or ReplayCheckpointCache(env.trace, env.cfg.n_nodes)
     for c0 in range(0, len(lanes), B):
         chunk = lanes[c0:c0 + B]
         venv = VectorProvisionEnv(env.trace, env.cfg, len(chunk),

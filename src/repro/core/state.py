@@ -355,3 +355,18 @@ def summary_features(matrix: np.ndarray) -> np.ndarray:
     cur = matrix[-1]
     deltas = [cur - matrix[i] for i in summary_offsets(matrix.shape[0])]
     return np.concatenate([cur] + deltas).astype(np.float32)
+
+
+def summary_features_batch(mat: np.ndarray, lanes: np.ndarray,
+                           out: np.ndarray) -> None:
+    """Batched ``summary_features``: write ``lanes``' summary rows of the
+    (B, k, 40) matrix stack into ``out`` (a persistent (B, 4*40) buffer).
+    Row layout matches the scalar function exactly — the (B, F) block the
+    tree policies consume in one batched predict."""
+    k = mat.shape[1]
+    i1, i6, i24 = summary_offsets(k)
+    cur = mat[lanes, k - 1]
+    out[lanes, 0:STATE_DIM] = cur
+    out[lanes, STATE_DIM:2 * STATE_DIM] = cur - mat[lanes, i1]
+    out[lanes, 2 * STATE_DIM:3 * STATE_DIM] = cur - mat[lanes, i6]
+    out[lanes, 3 * STATE_DIM:4 * STATE_DIM] = cur - mat[lanes, i24]

@@ -38,11 +38,27 @@ class RegressionTree:
         self.feature_frac = feature_frac
         self.rng = np.random.default_rng(seed)
         self.nodes: List[_Node] = []
+        self._packed = None
 
     def fit(self, X: np.ndarray, y: np.ndarray) -> "RegressionTree":
         self.nodes = []
+        self._packed = None
         self._grow(X, y, 0)
+        self._pack()
         return self
+
+    def _pack(self) -> None:
+        """Freeze the node list into flat arrays once per fit, so the
+        batched predict on the evaluation hot path (one call per lockstep
+        decision across B lanes) doesn't rebuild them every step."""
+        n = len(self.nodes)
+        self._packed = (
+            np.fromiter((nd.feature for nd in self.nodes), np.int64, n),
+            np.fromiter((nd.threshold for nd in self.nodes), np.float64, n),
+            np.fromiter((nd.left for nd in self.nodes), np.int64, n),
+            np.fromiter((nd.right for nd in self.nodes), np.int64, n),
+            np.fromiter((nd.value for nd in self.nodes), np.float64, n),
+        )
 
     def _grow(self, X, y, depth) -> int:
         idx = len(self.nodes)
@@ -98,16 +114,9 @@ class RegressionTree:
         """Level-synchronous batched traversal: every sample routes one
         tree level per iteration (<= max_depth iterations total)."""
         X = np.asarray(X)
-        feat = np.fromiter((nd.feature for nd in self.nodes), np.int64,
-                           len(self.nodes))
-        thr = np.fromiter((nd.threshold for nd in self.nodes), np.float64,
-                          len(self.nodes))
-        left = np.fromiter((nd.left for nd in self.nodes), np.int64,
-                           len(self.nodes))
-        right = np.fromiter((nd.right for nd in self.nodes), np.int64,
-                            len(self.nodes))
-        val = np.fromiter((nd.value for nd in self.nodes), np.float64,
-                          len(self.nodes))
+        if self._packed is None:
+            self._pack()
+        feat, thr, left, right, val = self._packed
         if np.issubdtype(X.dtype, np.floating):
             thr = thr.astype(X.dtype)   # weak-promotion comparison semantics
         cur = np.zeros(len(X), np.int64)

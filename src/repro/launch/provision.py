@@ -32,7 +32,8 @@ def main():
     ap.add_argument("--save-agent", default=None)
     args = ap.parse_args()
 
-    from repro.core import EnvConfig, ProvisionEnv, build_policy, evaluate
+    from repro.core import (EnvConfig, ProvisionEnv, ReplayCheckpointCache,
+                            VectorProvisionEnv, build_policy, evaluate_batch)
     from repro.core.provisioner import collect_offline_samples
     from repro.sim import synthesize_trace, split_trace
     from repro.sim.trace import PROFILES
@@ -43,7 +44,8 @@ def main():
     train_jobs, val_jobs = split_trace(jobs, 0.8)
     ecfg = EnvConfig(n_nodes=profile.n_nodes, history=args.history,
                      interval=args.interval, chain_nodes=args.nodes)
-    env_train = ProvisionEnv(jobs, ecfg, seed=args.seed)
+    cache = ReplayCheckpointCache(jobs, profile.n_nodes)
+    env_train = ProvisionEnv(jobs, ecfg, seed=args.seed, cache=cache)
 
     t0 = time.time()
     samples = None
@@ -59,10 +61,11 @@ def main():
                           history=args.history, reduced=True, seed=args.seed)
     print(f"[provision] trained {args.method} ({time.time()-t0:.0f}s)")
 
-    res = evaluate(env_train, policy, episodes=args.episodes,
-                   seed=args.seed + 1)
-    base = evaluate(env_train, build_policy("reactive", env_train),
-                    episodes=args.episodes, seed=args.seed + 1)
+    venv = VectorProvisionEnv(jobs, ecfg, args.episodes, seed=args.seed,
+                              cache=cache)
+    res = evaluate_batch(venv, policy, seed=args.seed + 1)
+    base = evaluate_batch(venv, build_policy("reactive", env_train),
+                          seed=args.seed + 1)
     out = {"method": res.summary(), "reactive": base.summary()}
     red = (base.mean_interruption_h - res.mean_interruption_h) \
         / max(base.mean_interruption_h, 1e-9) * 100

@@ -1,4 +1,6 @@
 from .cluster import Cluster  # noqa: F401
+from .scenarios import (CHAIN_SHAPES, LOAD_LEVELS, SCENARIOS,  # noqa: F401
+                        Scenario, get_scenario, iter_scenarios)
 from .simulator import (SampleBatch, SlurmSimulator, replay,  # noqa: F401
                         sample_batch)
 from .trace import (PROFILES, ClusterProfile, Job, clean_trace,  # noqa: F401

@@ -1,0 +1,140 @@
+"""First-class evaluation scenarios: the §6 grid as a registry.
+
+The paper's headline results (Figs. 8-10) come from an evaluation matrix
+— methods x clusters x load levels x chain shapes. This module names
+every cell: a ``Scenario`` is (ClusterProfile, load level, chain shape),
+registered under ``"<cluster>/<load>/<chain>"`` (e.g. ``V100/heavy/single``),
+iterable for sweeps via ``iter_scenarios``. The Fig-8/9 grid runner
+(benchmarks.bench_interruption), the examples, and ad-hoc experiments all
+draw their environments from here instead of re-declaring private
+cluster/load dicts.
+
+Environment construction imports ``repro.core`` lazily, so this module
+stays importable from ``repro.sim`` without a package cycle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, Iterator, List, Optional, Union
+
+from .trace import PROFILES, ClusterProfile, Job, synthesize_trace
+
+# offered-load regimes reproducing the paper's queue-wait bands (§3.1):
+# node-hours demanded / capacity
+LOAD_LEVELS: Dict[str, float] = {"light": 0.45, "medium": 0.8, "heavy": 1.05}
+
+# chained sub-job shapes: Fig. 8 single-node pairs, Fig. 9 8-node pairs
+CHAIN_SHAPES: Dict[str, int] = {"single": 1, "multi": 8}
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One named cell of the evaluation grid."""
+    name: str
+    profile: ClusterProfile
+    load: str
+    load_scale: float
+    chain: str
+    chain_nodes: int
+
+    @property
+    def cluster(self) -> str:
+        return self.profile.name
+
+    def with_chain_nodes(self, n_nodes: int) -> "Scenario":
+        """This cell with an arbitrary chain size: the registered shape
+        when one matches ``n_nodes``, else an ad-hoc ``<n>n`` variant
+        (sweep runners accept chain sizes outside CHAIN_SHAPES)."""
+        if n_nodes == self.chain_nodes:
+            return self
+        for cname, nodes in CHAIN_SHAPES.items():
+            if nodes == n_nodes:
+                return SCENARIOS[f"{self.cluster}/{self.load}/{cname}"]
+        return dataclasses.replace(
+            self, name=f"{self.cluster}/{self.load}/{n_nodes}n",
+            chain=f"{n_nodes}n", chain_nodes=n_nodes)
+
+    def make_trace(self, months: Optional[int] = None, seed: int = 0
+                   ) -> List[Job]:
+        return synthesize_trace(self.profile, months=months, seed=seed,
+                                load_scale=self.load_scale)
+
+    def env_config(self, history: int = 144, interval: float = 600.0,
+                   **kw):
+        from repro.core import EnvConfig
+        return EnvConfig(n_nodes=self.profile.n_nodes, history=history,
+                         interval=interval, chain_nodes=self.chain_nodes,
+                         **kw)
+
+    def make_env(self, months: Optional[int] = None, seed: int = 0,
+                 history: int = 144, interval: float = 600.0, cache=None,
+                 trace: Optional[List[Job]] = None):
+        """A scalar ProvisionEnv for this scenario (trace seeded ``seed``)."""
+        from repro.core import ProvisionEnv
+        trace = trace if trace is not None else self.make_trace(months, seed)
+        return ProvisionEnv(trace, self.env_config(history, interval),
+                            seed=seed, cache=cache)
+
+    def make_vector_env(self, batch: int, months: Optional[int] = None,
+                        seed: int = 0, history: int = 144,
+                        interval: float = 600.0, cache=None,
+                        trace: Optional[List[Job]] = None):
+        """A B-lane VectorProvisionEnv for this scenario; pass ``cache=``
+        to share one ReplayCheckpointCache across sweep cells that reuse
+        the same trace."""
+        from repro.core import VectorProvisionEnv
+        trace = trace if trace is not None else self.make_trace(months, seed)
+        return VectorProvisionEnv(trace, self.env_config(history, interval),
+                                  batch, seed=seed, cache=cache)
+
+
+def _build_registry() -> Dict[str, Scenario]:
+    reg = {}
+    for prof in PROFILES.values():
+        for lname, scale in LOAD_LEVELS.items():
+            for cname, nodes in CHAIN_SHAPES.items():
+                s = Scenario(f"{prof.name}/{lname}/{cname}", prof, lname,
+                             scale, cname, nodes)
+                reg[s.name] = s
+    return reg
+
+
+SCENARIOS: Dict[str, Scenario] = _build_registry()
+
+
+def _chain_name(chain: Union[str, int]) -> str:
+    if isinstance(chain, str):
+        return chain
+    for name, nodes in CHAIN_SHAPES.items():
+        if nodes == int(chain):
+            return name
+    raise KeyError(f"no chain shape with {chain} nodes "
+                   f"(registered: {CHAIN_SHAPES})")
+
+
+def get_scenario(cluster: str, load: Optional[str] = None,
+                 chain: Union[str, int] = "single") -> Scenario:
+    """Look up a scenario by full name (``"V100/heavy/single"``) or by
+    (cluster, load, chain) components; ``chain`` accepts a shape name or
+    a registered node count."""
+    if load is None:
+        return SCENARIOS[cluster]
+    return SCENARIOS[f"{cluster}/{load}/{_chain_name(chain)}"]
+
+
+def iter_scenarios(clusters: Optional[Iterable[str]] = None,
+                   loads: Optional[Iterable[str]] = None,
+                   chains: Optional[Iterable[Union[str, int]]] = None
+                   ) -> Iterator[Scenario]:
+    """Iterate the grid in registry order, optionally filtered by cluster
+    names, load-level names, and chain shapes (names or node counts)."""
+    chain_names = None if chains is None else {_chain_name(c)
+                                               for c in chains}
+    for s in SCENARIOS.values():
+        if clusters is not None and s.cluster not in clusters:
+            continue
+        if loads is not None and s.load not in loads:
+            continue
+        if chain_names is not None and s.chain not in chain_names:
+            continue
+        yield s
