@@ -8,6 +8,7 @@ CPU container is shared and noisy).
 Usage:
   PYTHONPATH=src python scripts/check_bench.py [--tolerance 0.6] [--update]
   PYTHONPATH=src python scripts/check_bench.py rollout   # subset by name
+  PYTHONPATH=src python scripts/check_bench.py all       # every tracked suite
 
 ``--update`` rewrites the committed baselines from the fresh run instead
 of gating (use after an intentional perf change, commit the diff).
@@ -63,13 +64,16 @@ def run_suites(filters, out_dir: pathlib.Path) -> None:
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("names", nargs="*",
-                    help="subset of tracked artifacts (substring match)")
+                    help="subset of tracked artifacts (substring match); "
+                         "'all' runs every tracked suite in one invocation")
     ap.add_argument("--tolerance", type=float, default=0.6,
                     help="fresh >= tolerance * baseline passes (default .6)")
     ap.add_argument("--update", action="store_true",
                     help="rewrite baselines from the fresh run")
     args = ap.parse_args()
 
+    if any(n.lower() == "all" for n in args.names):
+        args.names = []        # explicit 'all': every tracked suite, one run
     tracked = {k: v for k, v in TRACKED.items()
                if (BASELINE_DIR / f"{k}.json").exists() or args.update}
     if args.names:

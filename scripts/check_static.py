@@ -1,0 +1,103 @@
+#!/usr/bin/env python
+"""Static invariant gate: run the ``repro.analysis`` passes over src/
+and fail on any finding not covered by the committed baseline.
+
+The passes enforce the ROADMAP prose contracts (see
+src/repro/analysis/README.md for pass ids, the suppression comment
+syntax, and the baseline workflow):
+
+  import-discipline   optional-dependency policy + PEP 562 lazy inits
+  jit-purity          no host effects inside jit/pallas/scan bodies
+  lane-loop           no Python loops over the batch axis in hot modules
+  dtype-discipline    explicit dtypes; no float64 in the model path
+
+Usage:
+  PYTHONPATH=src python scripts/check_static.py                 # all passes
+  PYTHONPATH=src python scripts/check_static.py lane-loop ...   # subset
+  PYTHONPATH=src python scripts/check_static.py --update-baseline
+
+Runs on the tier-1 verify line after scripts/check_collect.py.
+``--update-baseline`` rewrites scripts/static_baseline.json from the
+fresh run (commit the diff; the file should only ever shrink).
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.analysis import runner  # noqa: E402
+
+BASELINE = ROOT / "scripts" / "static_baseline.json"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("passes", nargs="*",
+                    help="subset of pass ids to run (default: all)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the committed baseline from this run")
+    ap.add_argument("--baseline", type=pathlib.Path, default=BASELINE)
+    ap.add_argument("--root", type=pathlib.Path, default=ROOT / "src" / "repro",
+                    help="package directory to analyze")
+    args = ap.parse_args()
+
+    passes = runner.all_passes()
+    known = {p.pass_id for p in passes}
+    if args.passes:
+        unknown = set(args.passes) - known
+        if unknown:
+            print(f"check_static: unknown pass id(s) {sorted(unknown)}; "
+                  f"known: {sorted(known)}")
+            return 2
+        passes = [p for p in passes if p.pass_id in args.passes]
+
+    findings = runner.analyze_tree(args.root, passes)
+
+    if args.update_baseline:
+        # a partial-pass run must not drop other passes' baseline entries
+        if set(p.pass_id for p in passes) != known:
+            print("check_static: --update-baseline requires running all "
+                  "passes")
+            return 2
+        runner.save_baseline(findings, args.baseline)
+        print(f"check_static: baseline updated ({len(findings)} "
+              f"grandfathered finding(s)) -> {args.baseline}")
+        return 0
+
+    baseline = runner.load_baseline(args.baseline)
+    if args.passes:     # only gate the selected passes against the baseline
+        prefix = tuple(f"{p}::" for p in args.passes)
+        baseline = {k: v for k, v in baseline.items() if k.startswith(prefix)}
+    fresh, stale = runner.diff_baseline(findings, baseline)
+
+    counts = {}
+    for f in findings:
+        counts[f.pass_id] = counts.get(f.pass_id, 0) + 1
+    ran = ", ".join(f"{p.pass_id}={counts.get(p.pass_id, 0)}" for p in passes)
+    print(f"check_static: {len(findings)} finding(s) over {args.root} "
+          f"({ran}); baseline covers {len(findings) - len(fresh)}")
+
+    if stale:
+        print(f"check_static: {sum(stale.values())} stale baseline "
+              "entr(ies) — shrink the baseline with --update-baseline:")
+        for k in sorted(stale):
+            print(f"  [stale x{stale[k]}] {k}")
+    if fresh:
+        print(f"check_static: FAILED — {len(fresh)} non-baselined "
+              "finding(s):")
+        for f in fresh:
+            print(f"  {f}")
+        print("fix the violation, suppress it inline with a justification "
+              "(# repro-static: ok[pass-id] ...), or — for acknowledged "
+              "debt — rerun with --update-baseline and commit the diff")
+        return 1
+    print("check_static: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,68 @@
+"""Static invariant analyzer + CoW aliasing sanitizer.
+
+Four AST passes turn the ROADMAP prose contracts into enforced checks
+(``scripts/check_static.py`` drives them on the tier-1 verify line):
+
+* ``import-discipline`` — optional-dependency policy + PEP 562 lazy
+  ``__init__``\\ s (``repro.analysis.imports``);
+* ``jit-purity``       — no host effects inside jit/pallas/scan-traced
+  functions (``repro.analysis.purity``);
+* ``lane-loop``        — no Python loops over the batch axis in the
+  vectorized hot modules (``repro.analysis.loops``);
+* ``dtype-discipline`` — explicit dtypes / no float64 in the model path
+  (``repro.analysis.dtypes``).
+
+``repro.analysis.cow`` is the runtime half: the copy-on-write aliasing
+sanitizer for ``SlurmSimulator.fork()``.
+
+Exports are lazy (PEP 562) so the simulator's sanitizer probe doesn't
+pay for — and the analyzer itself keeps honest about — eager imports.
+See src/repro/analysis/README.md for pass ids, suppression syntax, and
+baseline workflow.
+"""
+from typing import TYPE_CHECKING
+
+_EXPORTS = {
+    "Finding": "base",
+    "Pass": "base",
+    "apply_suppressions": "base",
+    "parse_suppressions": "base",
+    "DtypeDisciplinePass": "dtypes",
+    "ImportDisciplinePass": "imports",
+    "JitPurityPass": "purity",
+    "LaneLoopPass": "loops",
+    "all_passes": "runner",
+    "analyze_source": "runner",
+    "analyze_tree": "runner",
+    "diff_baseline": "runner",
+    "load_baseline": "runner",
+    "save_baseline": "runner",
+}
+
+__all__ = sorted(_EXPORTS) + ["cow"]
+
+if TYPE_CHECKING:  # pragma: no cover - static analysis only
+    from . import cow  # noqa: F401
+    from .base import (Finding, Pass, apply_suppressions,  # noqa: F401
+                       parse_suppressions)
+    from .dtypes import DtypeDisciplinePass  # noqa: F401
+    from .imports import ImportDisciplinePass  # noqa: F401
+    from .loops import LaneLoopPass  # noqa: F401
+    from .purity import JitPurityPass  # noqa: F401
+    from .runner import (all_passes, analyze_source,  # noqa: F401
+                         analyze_tree, diff_baseline, load_baseline,
+                         save_baseline)
+
+
+def __getattr__(name: str):
+    import importlib
+    if name == "cow":
+        return importlib.import_module(".cow", __name__)
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    return getattr(importlib.import_module(f".{mod}", __name__), name)
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS) | {"cow"})

@@ -1,0 +1,90 @@
+"""``dtype-discipline`` — the float64/float32 dtype contracts as checks.
+
+The encoder/simulator path computes in float64 (CSR sample flats,
+percentile kernel inputs) and emits float32 observation slabs; the model
+path is float32 end to end. Dtype drift between the two silently breaks
+the bit-identical batched-vs-scalar contract (a float32 intermediate in
+the encoder changes percentile rounding; a float64 constant in a model
+promotes a whole forward pass when x64 is enabled).
+
+Two checks:
+
+* **dtype-less allocations** — ``np.array``/``zeros``/``empty``/
+  ``ones``/``full`` without an explicit dtype in any contract module.
+  The default (float64) may be what you meant, but the contract wants
+  the choice visible at the allocation site so drift is reviewable.
+  (``np.asarray`` is exempt: it is a conversion that deliberately
+  preserves its input dtype.)
+* **off-contract dtype** — any ``np.float64``/``np.double`` reference in
+  a float32-contract (model-path) module: the common source of implicit
+  float64→float32 promotion bugs is a float64 host array entering the
+  model path.
+"""
+from __future__ import annotations
+
+import ast
+import fnmatch
+from typing import List
+
+from .base import Finding, Pass, call_kwarg_names, dotted_name, numpy_aliases
+
+#: float64 compute contract (encoder/simulator path)
+FLOAT64_MODULES = (
+    "repro/sim/simulator.py",
+    "repro/core/state.py",
+    "repro/core/provisioner.py",
+)
+
+#: float32 contract (model path) — fnmatch patterns
+FLOAT32_MODULES = (
+    "repro/models/*.py",
+    "repro/core/dqn.py",
+    "repro/core/pg.py",
+    "repro/core/foundation.py",
+)
+
+#: allocation call -> index of the positional dtype argument
+_ALLOC_DTYPE_POS = {"array": 1, "zeros": 1, "empty": 1, "ones": 1, "full": 2}
+_F64_NAMES = {"float64", "double"}
+
+
+class DtypeDisciplinePass(Pass):
+    pass_id = "dtype-discipline"
+    description = ("explicit dtypes on np allocations in contract modules; "
+                   "no float64 references in the float32 model path")
+
+    def applies(self, relpath: str) -> bool:
+        return relpath in FLOAT64_MODULES or any(
+            fnmatch.fnmatch(relpath, p) for p in FLOAT32_MODULES)
+
+    def run(self, tree: ast.Module, src: str, relpath: str) -> List[Finding]:
+        np_names = numpy_aliases(tree)
+        is_f32 = any(fnmatch.fnmatch(relpath, p) for p in FLOAT32_MODULES)
+        findings: List[Finding] = []
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call):
+                name = dotted_name(node.func)
+                if name is None:
+                    continue
+                parts = name.split(".")
+                if len(parts) == 2 and parts[0] in np_names and \
+                        parts[1] in _ALLOC_DTYPE_POS:
+                    pos = _ALLOC_DTYPE_POS[parts[1]]
+                    has_dtype = (len(node.args) > pos
+                                 or "dtype" in call_kwarg_names(node))
+                    if not has_dtype:
+                        findings.append(self.finding(
+                            relpath, node,
+                            f"dtype-less {name}() in a dtype-contract "
+                            "module (pin the contract dtype explicitly)"))
+            elif is_f32 and isinstance(node, ast.Attribute):
+                name = dotted_name(node)
+                if name is not None:
+                    parts = name.split(".")
+                    if len(parts) == 2 and parts[0] in np_names and \
+                            parts[1] in _F64_NAMES:
+                        findings.append(self.finding(
+                            relpath, node,
+                            f"{name} referenced in a float32-contract "
+                            "model-path module (implicit promotion risk)"))
+        return findings

@@ -1,0 +1,116 @@
+"""``import-discipline`` — the ROADMAP optional-dependency policy as a
+machine check, generalizing ``scripts/check_collect.py`` from "does it
+import" to "*why* it imports":
+
+* no unconditional module-level import outside the stdlib and the hard
+  dependencies (numpy, jax, msgpack, repro itself). Optional packages
+  must sit behind ``try/except ImportError`` with a fallback, or inside
+  a function (deferred to use time);
+* heavy aggregate ``__init__``\\ s (``repro.train``, ``repro.analysis``)
+  must export lazily via PEP 562: a module-level ``__getattr__`` and no
+  eager relative import outside ``TYPE_CHECKING``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from .base import HARD_DEPS, Finding, Pass, stdlib_roots
+
+#: package __init__s that promise PEP 562 lazy exports (ROADMAP
+#: "Optional dependencies" policy). Relative-posix paths under src/.
+LAZY_INITS = (
+    "repro/train/__init__.py",
+    "repro/analysis/__init__.py",
+)
+
+
+def _is_type_checking_if(node: ast.If) -> bool:
+    t = node.test
+    return (isinstance(t, ast.Name) and t.id == "TYPE_CHECKING") or (
+        isinstance(t, ast.Attribute) and t.attr == "TYPE_CHECKING")
+
+
+def _catches_import_error(handler: ast.ExceptHandler) -> bool:
+    def names(t):
+        if t is None:
+            return ["<bare>"]
+        if isinstance(t, ast.Tuple):
+            return [n for e in t.elts for n in names(e)]
+        if isinstance(t, ast.Name):
+            return [t.id]
+        if isinstance(t, ast.Attribute):
+            return [t.attr]
+        return []
+    ok = {"ImportError", "ModuleNotFoundError", "Exception", "<bare>"}
+    return bool(set(names(handler.type)) & ok)
+
+
+class ImportDisciplinePass(Pass):
+    pass_id = "import-discipline"
+    description = ("module-level imports restricted to stdlib + hard deps; "
+                   "optional packages behind try/except ImportError; "
+                   "lazy __init__s stay PEP 562")
+
+    def run(self, tree: ast.Module, src: str, relpath: str) -> List[Finding]:
+        findings: List[Finding] = []
+        allowed = stdlib_roots() | HARD_DEPS
+        lazy_init = relpath in LAZY_INITS
+
+        def visit_body(body, guarded: bool) -> None:
+            for node in body:
+                if isinstance(node, ast.Try):
+                    g = guarded or any(_catches_import_error(h)
+                                       for h in node.handlers)
+                    visit_body(node.body, g)
+                    visit_body(node.orelse, guarded)
+                    visit_body(node.finalbody, guarded)
+                    for h in node.handlers:
+                        visit_body(h.body, guarded)
+                elif isinstance(node, ast.If):
+                    if _is_type_checking_if(node):
+                        continue       # static-analysis only, never executed
+                    visit_body(node.body, guarded)
+                    visit_body(node.orelse, guarded)
+                elif isinstance(node, (ast.With,)):
+                    visit_body(node.body, guarded)
+                elif isinstance(node, ast.Import):
+                    for a in node.names:
+                        self._check_root(findings, relpath, node,
+                                         a.name.split(".")[0], allowed,
+                                         guarded)
+                elif isinstance(node, ast.ImportFrom):
+                    if node.level:
+                        if lazy_init:
+                            findings.append(self.finding(
+                                relpath, node,
+                                "eager relative import in a PEP 562 lazy "
+                                "__init__ (move under TYPE_CHECKING or "
+                                "export via __getattr__)"))
+                        continue
+                    root = (node.module or "").split(".")[0]
+                    self._check_root(findings, relpath, node, root, allowed,
+                                     guarded)
+
+        visit_body(tree.body, guarded=False)
+
+        if lazy_init:
+            has_getattr = any(
+                isinstance(n, ast.FunctionDef) and n.name == "__getattr__"
+                for n in tree.body)
+            if not has_getattr:
+                findings.append(Finding(
+                    self.pass_id, relpath, 1,
+                    "lazy __init__ lost its module-level __getattr__ "
+                    "(PEP 562 export contract)"))
+        return findings
+
+    def _check_root(self, findings, relpath, node, root, allowed, guarded
+                    ) -> None:
+        if root in allowed or guarded or not root:
+            return
+        findings.append(self.finding(
+            relpath, node,
+            f"unconditional module-level import of optional package "
+            f"'{root}' (wrap in try/except ImportError with a fallback, "
+            f"or defer to use time)"))

@@ -1,0 +1,204 @@
+"""``jit-purity`` — jit-boundary purity as a machine check.
+
+Functions traced by ``jax.jit`` / ``pl.pallas_call`` / ``lax.scan`` run
+once at trace time; host-side work inside them silently bakes stale
+values into the compiled computation (or retraces forever). The pass
+marks every function the file hands to a tracer — jit decorators
+(including ``functools.partial(jax.jit, ...)``), ``jax.jit(fn)`` /
+``pallas_call(fn, ...)`` / ``lax.scan(fn, ...)`` call sites resolved to
+local ``def``\\ s, lambdas passed inline — and flags, inside their
+bodies:
+
+* host ``numpy`` calls (``np.*`` on the real numpy module; trace-time
+  constants like ``np.dtype``/``np.finfo``/``np.prod`` are allowed);
+* clock/randomness/IO host effects (``time.*``, ``random.*``,
+  ``datetime.*``, ``print``, ``open``);
+* Python-level mutation of enclosing state (``global``/``nonlocal``,
+  writes to ``self.*``, mutating method calls on non-local names).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set
+
+from .base import Finding, Pass, dotted_name, numpy_aliases
+
+#: tracer entry points whose first positional argument is traced
+_WRAP_CALLS = {
+    "jax.jit", "jit", "jax.pmap", "pmap",
+    "pl.pallas_call", "pallas_call",
+    "jax.lax.scan", "lax.scan",
+    "jax.lax.while_loop", "lax.while_loop", "jax.lax.fori_loop",
+    "lax.fori_loop", "jax.lax.cond", "lax.cond",
+}
+_JIT_DECORATORS = {"jax.jit", "jit", "jax.pmap", "pmap"}
+_PARTIAL = {"functools.partial", "partial"}
+
+#: np.* attributes legitimate at trace time (static dtype/shape math)
+_NP_TRACE_OK = {
+    "dtype", "finfo", "iinfo", "result_type", "promote_types", "isscalar",
+    "ndim", "shape", "prod", "broadcast_shapes", "issubdtype",
+}
+
+_HOST_MODULES = {"time", "random", "datetime"}
+_MUTATORS = {"append", "extend", "insert", "remove", "clear", "update",
+             "setdefault", "add", "pop", "popitem"}
+
+
+def _unwrap_partial(node: ast.AST) -> ast.AST:
+    """partial(f, ...) -> f (for both decorator and call-site forms)."""
+    if isinstance(node, ast.Call) and dotted_name(node.func) in _PARTIAL \
+            and node.args:
+        return node.args[0]
+    return node
+
+
+class JitPurityPass(Pass):
+    pass_id = "jit-purity"
+    description = ("no host numpy / clocks / IO / Python mutation inside "
+                   "functions traced by jax.jit, pallas_call, or lax "
+                   "control flow")
+
+    def run(self, tree: ast.Module, src: str, relpath: str) -> List[Finding]:
+        np_names = numpy_aliases(tree)
+        defs: Dict[str, List[ast.AST]] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                defs.setdefault(node.name, []).append(node)
+
+        traced: List[ast.AST] = []
+        seen: Set[int] = set()
+
+        def mark(node: ast.AST) -> None:
+            node = _unwrap_partial(node)
+            if isinstance(node, ast.Name):
+                for d in defs.get(node.id, []):
+                    mark(d)
+                return
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)) and id(node) not in seen:
+                seen.add(id(node))
+                traced.append(node)
+
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    d = _unwrap_partial(dec)
+                    if dotted_name(d) in _JIT_DECORATORS:
+                        mark(node)
+            elif isinstance(node, ast.Call):
+                if dotted_name(node.func) in _WRAP_CALLS and node.args:
+                    mark(node.args[0])
+
+        findings: List[Finding] = []
+        for fn in traced:
+            findings.extend(self._check_body(fn, np_names, relpath))
+        return findings
+
+    # ------------------------------------------------------------ body walk
+    def _check_body(self, fn: ast.AST, np_names: Set[str], relpath: str
+                    ) -> List[Finding]:
+        findings: List[Finding] = []
+        local = _local_names(fn)
+        body = fn.body if isinstance(fn.body, list) else [fn.body]
+        for stmt in body:
+            for node in ast.walk(stmt):
+                if isinstance(node, (ast.Global, ast.Nonlocal)):
+                    findings.append(self.finding(
+                        relpath, node,
+                        f"{type(node).__name__.lower()} statement inside a "
+                        "jit-traced function (Python-level mutation)"))
+                elif isinstance(node, (ast.Assign, ast.AugAssign)):
+                    targets = (node.targets
+                               if isinstance(node, ast.Assign)
+                               else [node.target])
+                    for t in targets:
+                        base = t
+                        while isinstance(base, (ast.Subscript, ast.Attribute)):
+                            if isinstance(base, ast.Attribute) and \
+                                    isinstance(base.value, ast.Name) and \
+                                    base.value.id == "self":
+                                findings.append(self.finding(
+                                    relpath, node,
+                                    "write to self.* inside a jit-traced "
+                                    "function (host state mutation baked "
+                                    "at trace time)"))
+                                break
+                            base = base.value
+                elif isinstance(node, ast.Call):
+                    findings.extend(self._check_call(node, np_names, local,
+                                                     relpath))
+        return findings
+
+    def _check_call(self, node: ast.Call, np_names: Set[str],
+                    local: Set[str], relpath: str) -> List[Finding]:
+        name = dotted_name(node.func)
+        if name is None:
+            if isinstance(node.func, ast.Attribute) and \
+                    node.func.attr in _MUTATORS:
+                return []          # mutator on a computed expression: skip
+            return []
+        parts = name.split(".")
+        if parts[0] in np_names and len(parts) > 1:
+            if parts[1] not in _NP_TRACE_OK:
+                return [self.finding(
+                    relpath, node,
+                    f"host numpy call {name}() inside a jit-traced function "
+                    "(runs once at trace time; use jnp)")]
+            return []
+        if parts[0] in _HOST_MODULES and len(parts) > 1:
+            return [self.finding(
+                relpath, node,
+                f"host effect {name}() inside a jit-traced function "
+                "(clock/randomness frozen at trace time)")]
+        if name in ("print", "open"):
+            return [self.finding(
+                relpath, node,
+                f"host IO {name}() inside a jit-traced function (use "
+                "jax.debug.print / move IO outside the jit boundary)")]
+        if len(parts) == 2 and parts[1] in _MUTATORS and \
+                parts[0] not in local and parts[0] != "self":
+            return [self.finding(
+                relpath, node,
+                f"mutating call {name}() on a non-local object inside a "
+                "jit-traced function (Python-level mutation)")]
+        return []
+
+
+def _local_names(fn: ast.AST) -> Set[str]:
+    """Names bound inside ``fn`` (params + assignments + loop/with/
+    comprehension targets + nested defs/imports)."""
+    local: Set[str] = set()
+    args = getattr(fn, "args", None)
+    if args is not None:
+        for a in (args.posonlyargs + args.args + args.kwonlyargs
+                  + ([args.vararg] if args.vararg else [])
+                  + ([args.kwarg] if args.kwarg else [])):
+            local.add(a.arg)
+
+    def add_target(t: ast.AST) -> None:
+        for n in ast.walk(t):
+            if isinstance(n, ast.Name):
+                local.add(n.id)
+
+    body = fn.body if isinstance(fn.body, list) else [fn.body]
+    for stmt in body:
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.Assign):
+                for t in node.targets:
+                    add_target(t)
+            elif isinstance(node, (ast.AugAssign, ast.AnnAssign,
+                                   ast.For, ast.AsyncFor)):
+                add_target(node.target)
+            elif isinstance(node, (ast.With, ast.AsyncWith)):
+                for item in node.items:
+                    if item.optional_vars is not None:
+                        add_target(item.optional_vars)
+            elif isinstance(node, ast.comprehension):
+                add_target(node.target)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                local.add(node.name)
+            elif isinstance(node, (ast.Import, ast.ImportFrom)):
+                for a in node.names:
+                    local.add((a.asname or a.name).split(".")[0])
+    return local

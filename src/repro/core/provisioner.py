@@ -334,18 +334,19 @@ class VectorProvisionEnv:
         # persistent obs buffers (served as views; copy to retain)
         self._mat = np.zeros((batch, k, STATE_DIM), np.float32)
         self._summary = np.zeros((batch, 4 * STATE_DIM), np.float32)
-        self._pred_remaining = np.zeros(batch)
-        self._time_pos = np.zeros(batch)
+        self._pred_remaining = np.zeros(batch, np.float64)
+        self._time_pos = np.zeros(batch, np.float64)
         self._slab = np.empty((batch, STATE_DIM), np.float32)
         # per-lane episode state (raw predecessor features + end time)
         self._has_pred = np.zeros(batch, bool)
-        self._pred_size = np.zeros(batch)
-        self._pred_limit = np.zeros(batch)
-        self._pred_qtime = np.zeros(batch)
-        self._pred_start = np.full(batch, -1.0)
-        self._pred_end = np.zeros(batch)
+        self._pred_size = np.zeros(batch, np.float64)
+        self._pred_limit = np.zeros(batch, np.float64)
+        self._pred_qtime = np.zeros(batch, np.float64)
+        self._pred_start = np.full(batch, -1.0, np.float64)
+        self._pred_end = np.zeros(batch, np.float64)
         self._succ_cols = np.broadcast_to(
-            np.array([float(cfg.chain_nodes), cfg.sub_limit]), (batch, 2))
+            np.array([float(cfg.chain_nodes), cfg.sub_limit], np.float64),
+            (batch, 2))
         t0 = trace[0].submit_time
         self._trace_t0 = t0
         self._trace_span = max(trace[-1].submit_time - t0, 1.0)
@@ -361,7 +362,7 @@ class VectorProvisionEnv:
         sb = sample_batch([self.envs[int(i)].sim for i in lanes])
         pred_cols = None
         if self._has_pred[lanes].any():
-            pred_cols = np.zeros((lanes.size, 4))
+            pred_cols = np.zeros((lanes.size, 4), np.float64)
             m = self._has_pred[lanes]
             l = lanes[m]
             pred_cols[m, 0] = self._pred_size[l]
@@ -399,9 +400,9 @@ class VectorProvisionEnv:
         lo, hi = self._t_start_range
         t0s = np.array([float(t_starts[i]) if t_starts is not None
                         else float(env.rng.uniform(lo, hi))
-                        for i, env in enumerate(self.envs)])
+                        for i, env in enumerate(self.envs)], np.float64)
         wps = np.array([self.envs[i].warmup_point(t0s[i])
-                        for i in range(self.batch)])
+                        for i in range(self.batch)], np.float64)
         # checkpointed forks, ascending so the frontier advances monotonically
         for i in np.argsort(wps, kind="stable"):
             i = int(i)
@@ -456,7 +457,7 @@ class VectorProvisionEnv:
     def step(self, actions: Sequence[int]
              ) -> Tuple[Dict, np.ndarray, np.ndarray, List[Dict]]:
         actions = np.asarray(actions, np.int64)
-        rewards = np.zeros(self.batch)
+        rewards = np.zeros(self.batch, np.float64)
         infos: List[Dict] = [{} for _ in range(self.batch)]
         live = np.flatnonzero(~self.dones)
         if not live.size:

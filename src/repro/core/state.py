@@ -40,7 +40,7 @@ STATE_DIM = 40
 DEFAULT_HISTORY = 144          # 24h at 10-min sampling
 SAMPLE_INTERVAL = 600.0        # 10 minutes
 
-_QFRAC = np.array([0.0, 0.25, 0.5, 0.75, 1.0])
+_QFRAC = np.array([0.0, 0.25, 0.5, 0.75, 1.0], np.float64)
 
 
 def _pcts(vals, scale: float) -> np.ndarray:
@@ -145,7 +145,11 @@ def encode_sample_batch(sb: SampleBatch, n_nodes: int, limit: float,
     v[:, 22] = 0.0
     v[:, 23] = 0.0
     off = sb.r_off
-    for b in np.flatnonzero(sb.r_count):
+    # documented contract exception: the running-size mean/std pair must
+    # keep np.mean's pairwise summation over each lane's original order
+    # to stay bit-identical to the scalar path (ROADMAP "Flat batched
+    # sampling")
+    for b in np.flatnonzero(sb.r_count):   # repro-static: ok[lane-loop]
         seg = sb.r_sizes[off[b]:off[b + 1]]
         v[b, 22] = float(seg.mean()) / n_nodes
         v[b, 23] = float(seg.std()) / n_nodes
@@ -178,8 +182,10 @@ def _flatten_samples(samples: Sequence[Dict]) -> SampleBatch:
     np.cumsum(r_count, out=r_off[1:])
 
     def flat(key, off):
-        out = np.empty(off[-1])
-        for b, s in enumerate(samples):
+        out = np.empty(off[-1], np.float64)
+        # dict-API adapter, not the batched hot path (the vector env
+        # feeds sample_batch flats directly)
+        for b, s in enumerate(samples):   # repro-static: ok[lane-loop]
             if off[b + 1] > off[b]:
                 out[off[b]:off[b + 1]] = np.asarray(s[key], np.float64)
         return out
@@ -197,14 +203,14 @@ def pack_pair_cols(preds: Optional[Sequence[Optional[Dict]]],
     """Dict-form pred/succ infos -> the (B, 4)/(B, 2) raw column arrays."""
     pred_cols = succ_cols = None
     if preds is not None:
-        pred_cols = np.zeros((B, 4))
-        for b, p in enumerate(preds):
+        pred_cols = np.zeros((B, 4), np.float64)
+        for b, p in enumerate(preds):  # repro-static: ok[lane-loop] adapter
             if p:
                 pred_cols[b] = (p.get("size", 0), p.get("limit", 0),
                                 p.get("queue_time", 0), p.get("elapsed", 0))
     if succs is not None:
-        succ_cols = np.zeros((B, 2))
-        for b, s in enumerate(succs):
+        succ_cols = np.zeros((B, 2), np.float64)
+        for b, s in enumerate(succs):  # repro-static: ok[lane-loop] adapter
             if s:
                 succ_cols[b] = (s.get("size", 0), s.get("limit", 0))
     return pred_cols, succ_cols

@@ -34,6 +34,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.analysis import cow as _cow
 from .cluster import Cluster
 from .trace import Job
 
@@ -61,24 +62,24 @@ class SlurmSimulator:
         cap = 64
         self._cap = cap
         self._n = 0
-        self._sub = np.zeros(cap)            # submit time
-        self._rt = np.zeros(cap)             # actual runtime
-        self._lim = np.zeros(cap)            # wall-clock limit
+        self._sub = np.zeros(cap, np.float64)      # submit time
+        self._rt = np.zeros(cap, np.float64)       # actual runtime
+        self._lim = np.zeros(cap, np.float64)      # wall-clock limit
         self._nn = np.zeros(cap, np.int64)   # node count
         self._ids = np.zeros(cap, np.int64)  # external job_id (tie-break)
-        self._start = np.full(cap, -1.0)
-        self._end = np.full(cap, -1.0)
+        self._start = np.full(cap, -1.0, np.float64)
+        self._end = np.full(cap, -1.0, np.float64)
         self._jobs: List[Job] = []           # aligned Job refs (API boundary)
         self._by_id: Dict[int, int] = {}     # job_id -> index (last wins)
         # pending arrivals: sorted by time (stable); _arr_ptr = next arrival
-        self._arr_t = np.empty(0)
+        self._arr_t = np.empty(0, np.float64)
         self._arr_i = _EMPTY_I
         self._arr_ptr = 0
         # queue of waiting job indices (priority order as of last schedule)
         self._q = _EMPTY_I
         # running set (parallel arrays, compacted on completion)
         self._run_i = np.zeros(cap, np.int64)
-        self._run_end = np.zeros(cap)
+        self._run_end = np.zeros(cap, np.float64)
         self._run_n = 0
         self._next_comp = _INF               # cached min over _run_end
         # finished job indices, completion order
@@ -386,7 +387,7 @@ class SlurmSimulator:
                 return False
         h = self._noop_head
         nav = max(self.cluster.n_available, 1)
-        prio_h = float(self._queue_prio(np.array([h]))[0])
+        prio_h = float(self._queue_prio(np.array([h], np.int64))[0])
         prio_n = self._queue_prio(new)
         if (prio_n > prio_h).any():
             return False
@@ -454,7 +455,7 @@ class SlurmSimulator:
                 return False
         h = self._noop_head
         nav = max(self.cluster.n_available, 1)
-        prio_h = float(self._queue_prio(np.array([h]))[0])
+        prio_h = float(self._queue_prio(np.array([h], np.int64))[0])
         if (SIZE_WEIGHT * nn / nav > prio_h).any():
             return False
         if self.now - self._sub[h] >= AGE_MAX:
@@ -654,6 +655,14 @@ class SlurmSimulator:
         s._noop_shadow = _INF
         s._noop_spare = 0
         s._noop_horizon = -_INF
+        if _cow.enabled():
+            # CoW aliasing sanitizer: freeze the shared arrays (both
+            # endpoints alias the same objects) so any in-place mutation
+            # of fork-shared state raises at the write site, and put the
+            # parent on the same copy-on-write footing — its next
+            # _register copies instead of writing through the snapshot.
+            _cow.freeze_shared(s)
+            self._shared_store = True
         return s
 
     # ------------------------------------------------------------ metrics
@@ -720,10 +729,11 @@ def sample_batch(sims: Sequence[SlurmSimulator]) -> SampleBatch:
     turns this into the (B, 40) observation slab in one numpy pass.
     """
     B = len(sims)
-    times = np.empty(B)
+    times = np.empty(B, np.float64)
     q_count = np.empty(B, np.int64)
     r_count = np.empty(B, np.int64)
-    for b, s in enumerate(sims):
+    for b, s in enumerate(sims):   # repro-static: ok[lane-loop] CSR gather
+        # fill: O(B) python over simulator objects, vectorized per-lane inner
         times[b] = s.now
         q_count[b] = s._q.size
         r_count[b] = s._run_n
@@ -731,13 +741,14 @@ def sample_batch(sims: Sequence[SlurmSimulator]) -> SampleBatch:
     r_off = np.zeros(B + 1, np.int64)
     np.cumsum(q_count, out=q_off[1:])
     np.cumsum(r_count, out=r_off[1:])
-    q_sizes = np.empty(q_off[-1])
-    q_ages = np.empty(q_off[-1])
-    q_limits = np.empty(q_off[-1])
-    r_sizes = np.empty(r_off[-1])
-    r_elapsed = np.empty(r_off[-1])
-    r_limits = np.empty(r_off[-1])
-    for b, s in enumerate(sims):
+    q_sizes = np.empty(q_off[-1], np.float64)
+    q_ages = np.empty(q_off[-1], np.float64)
+    q_limits = np.empty(q_off[-1], np.float64)
+    r_sizes = np.empty(r_off[-1], np.float64)
+    r_elapsed = np.empty(r_off[-1], np.float64)
+    r_limits = np.empty(r_off[-1], np.float64)
+    for b, s in enumerate(sims):   # repro-static: ok[lane-loop] CSR gather
+        # fill: the inner gathers are vectorized slices off the SoA arrays
         a, e = q_off[b], q_off[b + 1]
         if e > a:
             q = s._q

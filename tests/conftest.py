@@ -1,3 +1,4 @@
+import importlib.util
 import os
 import sys
 
@@ -6,9 +7,17 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 # optional-dependency policy (ROADMAP.md): the suite must collect and run
-# without optional packages. When hypothesis is absent, fall back to the
-# deterministic shim in tests/_shims/.
-try:
-    import hypothesis  # noqa: F401
-except ImportError:
+# without optional packages. The deterministic shim in tests/_shims/ is
+# injected ONLY when no real hypothesis can be resolved — probed with
+# find_spec (no import side effects) so an installed hypothesis is never
+# shadowed by the shim (pinned by tests/test_collect_imports.py).
+if importlib.util.find_spec("hypothesis") is None:
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "_shims"))
+
+# the whole suite runs under the CoW aliasing sanitizer: fork-shared
+# simulator arrays are frozen until _unshare, so an aliasing bug raises
+# at the write site instead of corrupting sibling lanes. Opt out with
+# REPRO_COW_SANITIZE=0 (e.g. to bisect a sanitizer-induced failure).
+if os.environ.get("REPRO_COW_SANITIZE", "1") != "0":
+    from repro.analysis import cow as _cow
+    _cow.enable()

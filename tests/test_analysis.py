@@ -1,0 +1,285 @@
+"""Regression tests for the repro.analysis static passes: a fixture
+corpus with at least one true-positive and one clean example per pass,
+the suppression comment syntax, the baseline diff logic, and the
+repo-wide gate (src/ must stay clean modulo the committed baseline).
+"""
+import pathlib
+import textwrap
+
+import pytest
+
+from repro.analysis import (DtypeDisciplinePass, ImportDisciplinePass,
+                            JitPurityPass, LaneLoopPass, analyze_source,
+                            diff_baseline)
+from repro.analysis.runner import all_passes, analyze_tree, load_baseline
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+HOT = "repro/core/state.py"          # lane-loop + dtype contract module
+MODEL = "repro/models/blocks.py"     # float32-contract module
+
+
+def run_pass(p, src, relpath="repro/sim/simulator.py", suppress=True):
+    return analyze_source(textwrap.dedent(src), relpath, [p],
+                          suppress=suppress)
+
+
+# ---------------------------------------------------------- import-discipline
+BAD_IMPORT = """
+    import numpy as np
+    import zstandard
+"""
+
+CLEAN_IMPORT = """
+    import os
+    import numpy as np
+    try:
+        import zstandard as zstd
+    except ImportError:
+        zstd = None
+
+    def late():
+        import pandas  # deferred to use time: allowed
+        return pandas
+"""
+
+
+def test_import_discipline_true_positive():
+    f = run_pass(ImportDisciplinePass(), BAD_IMPORT)
+    assert len(f) == 1 and f[0].pass_id == "import-discipline"
+    assert "zstandard" in f[0].message
+
+
+def test_import_discipline_clean():
+    assert run_pass(ImportDisciplinePass(), CLEAN_IMPORT) == []
+
+
+def test_import_discipline_lazy_init_contract():
+    eager = "from .chain import ChainConfig\n"
+    f = run_pass(ImportDisciplinePass(), eager,
+                 relpath="repro/train/__init__.py")
+    ids = {x.message for x in f}
+    assert any("eager relative import" in m for m in ids)
+    assert any("__getattr__" in m for m in ids)
+    lazy = """
+        from typing import TYPE_CHECKING
+        if TYPE_CHECKING:
+            from .chain import ChainConfig
+
+        def __getattr__(name):
+            raise AttributeError(name)
+    """
+    assert run_pass(ImportDisciplinePass(), lazy,
+                    relpath="repro/train/__init__.py") == []
+
+
+# ---------------------------------------------------------------- jit-purity
+BAD_JIT = """
+    import numpy as np
+    import jax
+
+    @jax.jit
+    def fwd(x):
+        scale = np.sqrt(x.shape[-1])   # host numpy: baked at trace time
+        return x * scale
+"""
+
+BAD_SCAN = """
+    import time
+    import jax
+
+    def outer(xs):
+        def body(carry, x):
+            t = time.time()            # clock frozen at trace time
+            return carry + x, t
+        return jax.lax.scan(body, 0.0, xs)
+"""
+
+BAD_MUTATION = """
+    import jax
+    log = []
+
+    @jax.jit
+    def fwd(x):
+        log.append(x)                  # Python-level mutation
+        return x
+"""
+
+CLEAN_JIT = """
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def fwd(x):
+        acc = jnp.zeros(x.shape, np.float32)   # np.dtype-style: trace-ok
+        out = []
+        out.append(acc + x)            # local list: fine
+        return out[0]
+
+    def host(x):
+        return np.sqrt(x)              # not traced: host numpy is fine
+"""
+
+
+def test_jit_purity_true_positives():
+    f = run_pass(JitPurityPass(), BAD_JIT)
+    assert len(f) == 1 and "np.sqrt" in f[0].message
+    f = run_pass(JitPurityPass(), BAD_SCAN)
+    assert len(f) == 1 and "time.time" in f[0].message
+    f = run_pass(JitPurityPass(), BAD_MUTATION)
+    assert len(f) == 1 and "log.append" in f[0].message
+
+
+def test_jit_purity_clean():
+    assert run_pass(JitPurityPass(), CLEAN_JIT) == []
+
+
+def test_jit_purity_pallas_and_partial():
+    src = """
+        import functools
+        import numpy as np
+        from jax.experimental import pallas as pl
+
+        def _kernel(x_ref, o_ref, eps):
+            o_ref[...] = x_ref[...] * np.float64(eps)
+
+        def op(x, eps):
+            return pl.pallas_call(
+                functools.partial(_kernel, eps=eps))(x)
+    """
+    f = run_pass(JitPurityPass(), src)
+    assert len(f) == 1 and "np.float64" in f[0].message
+
+
+# ----------------------------------------------------------------- lane-loop
+BAD_LOOP = """
+    def encode(sims):
+        out = []
+        for b, s in enumerate(sims):
+            out.append(s.now)
+        return out
+"""
+
+CLEAN_LOOP = """
+    def pcts(vals):
+        total = 0.0
+        for v in vals:                 # not the lane axis
+            total += v
+        return total
+"""
+
+
+def test_lane_loop_true_positive():
+    f = run_pass(LaneLoopPass(), BAD_LOOP, relpath=HOT)
+    assert len(f) == 1 and f[0].pass_id == "lane-loop"
+
+
+def test_lane_loop_clean_and_scoped():
+    assert run_pass(LaneLoopPass(), CLEAN_LOOP, relpath=HOT) == []
+    # outside the designated hot modules the pass does not apply
+    assert run_pass(LaneLoopPass(), BAD_LOOP,
+                    relpath="repro/core/agent.py") == []
+
+
+# ----------------------------------------------------------- dtype-discipline
+BAD_DTYPE = """
+    import numpy as np
+    buf = np.zeros(16)
+"""
+
+CLEAN_DTYPE = """
+    import numpy as np
+    buf = np.zeros(16, np.float64)
+    conv = np.asarray(buf)             # conversion: dtype-preserving, exempt
+    like = np.zeros_like(buf)
+"""
+
+BAD_MODEL_F64 = """
+    import numpy as np
+    import jax.numpy as jnp
+
+    def embed(x):
+        table = np.zeros((4, 4), np.float64)
+        return jnp.asarray(table) + x
+"""
+
+
+def test_dtype_discipline_true_positive():
+    f = run_pass(DtypeDisciplinePass(), BAD_DTYPE, relpath=HOT)
+    assert len(f) == 1 and "dtype-less" in f[0].message
+
+
+def test_dtype_discipline_clean():
+    assert run_pass(DtypeDisciplinePass(), CLEAN_DTYPE, relpath=HOT) == []
+
+
+def test_dtype_discipline_model_float64():
+    f = run_pass(DtypeDisciplinePass(), BAD_MODEL_F64, relpath=MODEL)
+    assert len(f) == 1 and "float32-contract" in f[0].message
+    # the same source in a float64-contract module is fine
+    assert run_pass(DtypeDisciplinePass(), BAD_MODEL_F64, relpath=HOT) == []
+
+
+# -------------------------------------------------- suppressions + baseline
+def test_line_suppression():
+    src = """
+        import numpy as np
+        buf = np.zeros(16)   # repro-static: ok[dtype-discipline] scratch
+    """
+    assert run_pass(DtypeDisciplinePass(), src, relpath=HOT) == []
+    # the raw finding is still produced pre-suppression
+    assert len(run_pass(DtypeDisciplinePass(), src, relpath=HOT,
+                        suppress=False)) == 1
+
+
+def test_file_suppression_and_wildcard():
+    src = """
+        # repro-static: skip-file[lane-loop] generated adapter
+        def encode(sims):
+            for b, s in enumerate(sims):
+                pass
+    """
+    assert run_pass(LaneLoopPass(), src, relpath=HOT) == []
+    src_all = (textwrap.dedent(BAD_DTYPE)
+               + "# repro-static: skip-file[*] vendored\n")
+    assert analyze_source(src_all, HOT) == []
+
+
+def test_wrong_pass_id_does_not_suppress():
+    src = """
+        import numpy as np
+        buf = np.zeros(16)   # repro-static: ok[lane-loop] wrong id
+    """
+    assert len(run_pass(DtypeDisciplinePass(), src, relpath=HOT)) == 1
+
+
+def test_baseline_diff_counts():
+    f = run_pass(DtypeDisciplinePass(), BAD_DTYPE, relpath=HOT)
+    base = {f[0].fingerprint: 1}
+    fresh, stale = diff_baseline(f, base)
+    assert fresh == [] and stale == {}
+    # a second identical finding exceeds the budget
+    fresh, stale = diff_baseline(f + f, base)
+    assert len(fresh) == 1 and stale == {}
+    # an unused entry is reported stale
+    fresh, stale = diff_baseline([], base)
+    assert fresh == [] and stale == base
+
+
+# ------------------------------------------------------------- repo-wide gate
+def test_src_tree_clean_modulo_baseline():
+    """The committed tree passes every pass with the committed baseline —
+    the in-suite mirror of scripts/check_static.py."""
+    findings = analyze_tree(ROOT / "src" / "repro", all_passes())
+    baseline = load_baseline(ROOT / "scripts" / "static_baseline.json")
+    fresh, _stale = diff_baseline(findings, baseline)
+    assert fresh == [], "non-baselined findings:\n" + "\n".join(
+        str(f) for f in fresh)
+
+
+def test_pass_ids_unique_and_stable():
+    ids = [p.pass_id for p in all_passes()]
+    assert ids == ["import-discipline", "jit-purity", "lane-loop",
+                   "dtype-discipline"]
+    assert len(set(ids)) == len(ids)

@@ -157,6 +157,62 @@ def test_noop_schedule_cache_equivalence():
     assert res_opt == res_ref
 
 
+def test_cow_sanitizer_blocks_shared_write(trace_cfg):
+    """Sanitized mode (the whole suite's default, conftest.py): mutating
+    a fork-shared array without _unshare raises at the write site —
+    on the fork AND on the parent — while legitimate CoW writes
+    (register-after-unshare, wholesale replacement) still work."""
+    jobs, cfg = trace_cfg
+    import copy
+    from repro.analysis import cow
+    from repro.sim import SlurmSimulator
+    from repro.sim.trace import Job
+    with cow.sanitized():
+        base = SlurmSimulator(cfg.n_nodes, mode="fast")
+        base.load([copy.copy(j) for j in jobs])
+        base.run_until(jobs[0].submit_time + 3 * 24 * HOUR)
+        f = base.fork()
+        # in-place mutation of shared state raises on either endpoint
+        for sim in (f, base):
+            with pytest.raises(ValueError):
+                sim._sub[0] = 123.0
+            with pytest.raises(ValueError):
+                sim._nn[0] = 7
+        # legitimate path: the fork's first _register unshares, after
+        # which its private job store is writeable again
+        j = Job(job_id=10**7 + 5, user_id=1, submit_time=f.now,
+                runtime=HOUR, time_limit=2 * HOUR, n_nodes=1)
+        f.submit(j)
+        assert f._sub.flags.writeable
+        f._sub[0] = f._sub[0]          # private copy: no raise
+        # the parent was marked copy-on-write too: its next register
+        # copies instead of writing through the frozen snapshot
+        j2 = Job(job_id=10**7 + 6, user_id=1, submit_time=base.now,
+                 runtime=HOUR, time_limit=2 * HOUR, n_nodes=1)
+        base.submit(j2)
+        assert base._sub.flags.writeable
+        base.run_until_started(j2)
+
+
+def test_cow_sanitizer_on_off_equivalence(trace_cfg):
+    """The sanitizer must never change simulation results — a full
+    warm+cold episode run is bit-identical with it on and off."""
+    jobs, cfg = trace_cfg
+    from repro.analysis import cow
+    lo, hi = ProvisionEnv(jobs, cfg, seed=0)._t_start_range
+    ts = [lo + 0.55 * (hi - lo), lo + 0.3 * (hi - lo)]
+    policy = (lambda t: 1 if t >= 2 else 0)
+    runs = {}
+    for on in (True, False):
+        with cow.sanitized(on):
+            venv = VectorProvisionEnv(jobs, cfg, 2, seed=0)
+            cold = run_episode(venv, ts, policy)
+            warm = run_episode(venv, ts, policy)   # checkpoint-ring resets
+            runs[on] = (cold, warm)
+    assert_trajs_equal(runs[True][0], runs[False][0])
+    assert_trajs_equal(runs[True][1], runs[False][1])
+
+
 def test_cow_fork_isolation(trace_cfg):
     """CoW forks must not leak registrations or starts across the split."""
     jobs, cfg = trace_cfg

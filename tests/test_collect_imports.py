@@ -29,6 +29,29 @@ def test_module_imports(mod):
     importlib.import_module(mod)
 
 
+def test_hypothesis_shim_only_when_absent():
+    """The tests/_shims/hypothesis.py stand-in is injected by conftest.py
+    ONLY when no real hypothesis distribution is installed — a real
+    install must never be shadowed by the shim (and without one, the
+    shim must be what resolves)."""
+    import importlib.metadata
+
+    import hypothesis
+
+    shim_dir = pathlib.Path(__file__).resolve().parent / "_shims"
+    is_shim = pathlib.Path(hypothesis.__file__).resolve().parent == shim_dir
+    try:
+        importlib.metadata.distribution("hypothesis")
+        real_installed = True
+    except importlib.metadata.PackageNotFoundError:
+        real_installed = False
+    assert is_shim == (not real_installed)
+    # conftest's probe must be side-effect free: the shim dir is on
+    # sys.path only in the shim case
+    import sys
+    assert (str(shim_dir) in sys.path) == (not real_installed)
+
+
 def test_core_does_not_pull_checkpoint():
     """repro.core needs only repro.train.optimizer; the checkpoint stack
     (and its optional codecs) must stay un-imported (PEP 562 laziness)."""
