@@ -1,7 +1,7 @@
 """Evaluation-grid throughput: episodes/sec of ``evaluate_batch`` at B=32
-across the full eight-method registry vs the legacy scalar ``evaluate``
-path (cache-less ProvisionEnv, one trace-head replay per reset — the cost
-model the pre-protocol evaluation loop paid).
+across the full eight-method registry vs the legacy scalar cost model
+(B=1 lane over a checkpoint-free cache: one trace-head replay per
+episode — exactly what the retired pre-protocol ``evaluate`` loop paid).
 
 Tracked by scripts/check_bench.py (``eval_throughput``): the batched grid
 must stay >= 5x the scalar path at B=32 (ISSUE 5 acceptance). Learners
@@ -18,9 +18,9 @@ from typing import Dict
 import numpy as np
 
 from repro.core import (DQNConfig, DQNLearner, EnvConfig, FoundationConfig,
-                        MiragePolicy, PGConfig, PGLearner, ProvisionEnv,
+                        MiragePolicy, PGConfig, PGLearner,
                         ReplayCheckpointCache, TreePolicy,
-                        VectorProvisionEnv, evaluate, evaluate_batch)
+                        VectorProvisionEnv, evaluate_batch)
 from repro.core.agent import ALL_METHODS
 from repro.core.trees import GradientBoosting, RandomForest
 from repro.sim import get_scenario
@@ -88,16 +88,21 @@ def bench_eval_throughput(batch: int = EVAL_BATCH):
         per_method[m] = {"batch_s": dt, "batch_eps_per_s": batch / dt,
                          "mean_interruption_h": res.mean_interruption_h}
 
-    # legacy scalar path: no cache -> every reset re-pays the trace-head
-    # replay, exactly what the pre-protocol evaluate() cost per episode.
-    # The avg window is restored to its warm snapshot so both timed sides
-    # run the same policy state (the batched pass observed 32 waits).
+    # legacy scalar cost model: a B=1 lane over a checkpoint-free cache
+    # (interval=inf keeps only the pristine head), so every episode
+    # re-pays the trace-head replay — exactly what the retired
+    # pre-protocol evaluate() cost per episode. The avg window is
+    # restored to its warm snapshot so both timed sides run the same
+    # policy state (the batched pass observed 32 waits).
     policies["avg"].avg.waits = avg_warm
     t_scalar_total = 0.0
     for m in ALL_METHODS:
-        env = ProvisionEnv(jobs, cfg, seed=0)
+        venv1 = VectorProvisionEnv(jobs, cfg, 1, seed=0,
+                                   cache=ReplayCheckpointCache(
+                                       jobs, cfg.n_nodes,
+                                       interval=float("inf")))
         t0 = time.perf_counter()
-        evaluate(env, policies[m], episodes=SCALAR_EPISODES, seed=17)
+        evaluate_batch(venv1, policies[m], episodes=SCALAR_EPISODES, seed=17)
         dt = time.perf_counter() - t0
         t_scalar_total += dt
         per_method[m]["scalar_eps_per_s"] = SCALAR_EPISODES / dt

@@ -28,10 +28,12 @@ RL_TRAIN_LOAD = "heavy"
 def run_grid(chain_nodes: int, methods=ALL_METHODS,
              clusters=("V100", "RTX", "A100")) -> Dict:
     """One Fig-8/9-style grid over the scenario registry: trains the
-    learned methods on the heavy-load scenario (train seed), then runs
-    ``evaluate_batch`` per (load scenario x method) — EPISODES lockstep
-    lanes per cell sharing one ReplayCheckpointCache per validation
-    trace (val seed)."""
+    learned methods on the fault-free heavy-load scenario (train seed),
+    then runs ``evaluate_batch`` per (load scenario x method) — EPISODES
+    lockstep lanes per cell sharing one ReplayCheckpointCache per
+    validation trace (val seed). Faulted cells (e.g. heavy/faulty) ride
+    the same grid, keyed ``"<load>/<fault>"``, so every method is also
+    measured under seeded node failures + requeues."""
     results: Dict[str, Dict] = {}
     for cname in clusters:
         t0 = time.time()
@@ -40,12 +42,14 @@ def run_grid(chain_nodes: int, methods=ALL_METHODS,
         cells = [sc.with_chain_nodes(chain_nodes) for sc in
                  iter_scenarios(clusters=[cname], chains=["single"])]
         env_train = next(sc for sc in cells
-                         if sc.load == RL_TRAIN_LOAD).make_env(
+                         if sc.load == RL_TRAIN_LOAD and not sc.fault
+                         ).make_env(
             months=TRACE_MONTHS, seed=100, history=HISTORY, interval=INTERVAL)
         # offline samples span ALL load regimes (the real traces mix loads
-        # month to month, §3.1) so the wait regressors see light queues too
+        # month to month, §3.1) so the wait regressors see light queues
+        # too; fault-free cells only — training happens on healthy history
         samples = []
-        for li, sc in enumerate(cells):
+        for li, sc in enumerate(c for c in cells if not c.fault):
             env_l = sc.make_env(months=TRACE_MONTHS, seed=100 + li,
                                 history=HISTORY, interval=INTERVAL)
             samples += collect_offline_samples(
@@ -65,9 +69,10 @@ def run_grid(chain_nodes: int, methods=ALL_METHODS,
             venv = sc.make_vector_env(EPISODES, months=TRACE_MONTHS,
                                       seed=200, history=HISTORY,
                                       interval=INTERVAL)
+            key = sc.load + (f"/{sc.fault}" if sc.fault else "")
             for m in methods:
                 res = evaluate_batch(venv, policies[m], seed=7)
-                results.setdefault(cname, {}).setdefault(sc.load, {})[m] = \
+                results.setdefault(cname, {}).setdefault(key, {})[m] = \
                     res.summary()
         results[cname]["train_wall_s"] = t_train
     return results

@@ -151,6 +151,71 @@ def bench_rollout_throughput(batch: int = 32):
     return payload
 
 
+def bench_rollout_faulty(batch: int = 32):
+    """Faulted-cell rollout throughput + the zero-fault-mode overhead gate.
+
+    Three vector envs over the same trace: (a) the registered "faulty"
+    profile's FaultPlan (node failure/repair windows, requeues), (b) the
+    empty ``FaultPlan.none()``, and (c) faults disabled outright
+    (``faults=None``). Tracked metrics: warm faulted episodes/sec
+    (``vector_episodes_per_s``) and ``zero_fault_ratio`` — the empty-plan
+    throughput over the faults-off throughput. ``FaultPlan.none()`` is
+    bit-identical to the fault-free engine by test
+    (test_fault_plan_none_bit_identical); this gates that it is also
+    ~free (ratio ~1.0), i.e. fault support costs nothing when unused."""
+    from repro.core import EnvConfig, VectorProvisionEnv
+    from repro.sim import FaultPlan, get_fault_spec
+
+    jobs = synthesize_trace(V100, months=3, seed=4, load_scale=0.9)
+    plan = get_fault_spec("faulty").make_plan(
+        jobs[-1].submit_time + 3 * DAY, V100.n_nodes, seed=11)
+    policy = (lambda t: 1 if t >= 6 else 0)
+
+    def warm_eps(faults):
+        cfg = EnvConfig(n_nodes=V100.n_nodes, history=12, interval=1800.0,
+                        faults=faults)
+        venv = VectorProvisionEnv(jobs, cfg, batch, seed=0)
+
+        def epoch():
+            venv.reset()
+            t, final = 0, [{} for _ in range(batch)]
+            prev = np.zeros(batch, bool)
+            while not venv.dones.all():
+                _, _, dones, infos = venv.step([policy(t)] * batch)
+                for i in np.flatnonzero(dones & ~prev):
+                    final[i] = infos[i]   # lane's last info: episode totals
+                prev = dones
+                t += 1
+            return final
+
+        epoch()                          # cold epoch: pays the replay cache
+        infos, t_warm = timed(epoch)     # warm epoch: steady-state regime
+        n_faults = sum(i.get("n_faults", 0) for i in infos)
+        n_requeues = sum(i.get("n_requeues", 0) for i in infos)
+        return batch / t_warm, n_faults, n_requeues
+
+    eps_faulty, n_faults, n_requeues = warm_eps(plan)
+    eps_none, _, _ = warm_eps(FaultPlan.none())
+    eps_off, _, _ = warm_eps(None)
+    ratio = eps_none / eps_off
+    payload = {
+        "batch": batch,
+        "vector_episodes_per_s": eps_faulty,
+        "empty_plan_episodes_per_s": eps_none,
+        "faults_off_episodes_per_s": eps_off,
+        "zero_fault_ratio": ratio,
+        "fault_windows": len(plan) // 2,
+        "lane_faults_per_epoch": n_faults,
+        "lane_requeues_per_epoch": n_requeues,
+        "target": "zero_fault_ratio ~1.0 (empty plan costs nothing)",
+    }
+    emit("rollout_faulty", 1.0 / eps_faulty * 1e6,
+         f"faulty={eps_faulty:.1f} eps/s (faults={n_faults} "
+         f"requeues={n_requeues}); zero-fault ratio={ratio:.2f} (~1.0)",
+         payload)
+    return payload
+
+
 def run():
     bench_trace_stats()
     bench_sim_fidelity()

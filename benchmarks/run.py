@@ -20,6 +20,7 @@ def suites():
     return [
         ("simulator (Table 1, 5.2)", bench_simulator.run),
         ("rollout throughput (5.1)", bench_simulator.bench_rollout_throughput),
+        ("rollout faulty (robustness)", bench_simulator.bench_rollout_faulty),
         ("eval throughput (6, Figs. 8-9 grid)", bench_eval.run),
         ("kernels", bench_kernels.run),
         ("moe gating (4.7)", bench_moe_gating.run),

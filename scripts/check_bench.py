@@ -35,6 +35,10 @@ TRACKED = {
         "suite": "rollout throughput",
         "metrics": {"vector_episodes_per_s": "up", "speedup": "up"},
     },
+    "rollout_faulty": {
+        "suite": "rollout faulty",
+        "metrics": {"vector_episodes_per_s": "up", "zero_fault_ratio": "up"},
+    },
     "sim_overhead": {
         "suite": "simulator",
         "metrics": {"sim_months_per_wallclock_min": "up"},

@@ -1,14 +1,16 @@
 """Mirage core: the paper's contribution — RL-based proactive provisioning."""
 from .agent import (ALL_METHODS, DEFAULT_METHOD, EvalResult,  # noqa: F401
-                    LearnerPolicy, MiragePolicy, build_policy, evaluate,
+                    LearnerPolicy, MiragePolicy, build_policy,
                     evaluate_batch, pretrain_foundation, train_online_dqn,
                     train_online_pg)
 from .baselines import (AvgWaitPolicy, ReactivePolicy,  # noqa: F401
                         TreePolicy)
+from .control import (ChainDriver, ChainResult, ControlPlane,  # noqa: F401
+                      DecisionJournal, RetryPolicy, TransientControlError)
 from .dqn import DQNConfig, DQNLearner  # noqa: F401
 from .foundation import FoundationConfig, init_foundation, q_values  # noqa: F401
 from .pg import PGConfig, PGLearner  # noqa: F401
-from .policy import Policy, batch_obs  # noqa: F401
+from .policy import FallbackPolicy, Policy, batch_obs  # noqa: F401
 from .provisioner import (EnvConfig, ProvisionEnv,  # noqa: F401
                           ReplayCheckpointCache, VectorProvisionEnv,
                           collect_offline_samples)

@@ -13,8 +13,13 @@ Mirage's default is MoE+DQN; transformer+PG is the aggressive option
 Every method is a ``Policy`` (repro.core.policy): ``act_batch`` over the
 vector env's batched obs dict, plus the ``reset_lanes`` / ``observe``
 hooks. ``evaluate_batch`` rolls B lockstep episodes off one shared
-ReplayCheckpointCache; the scalar ``evaluate`` survives one release as a
-B=1 forwarding shim.
+ReplayCheckpointCache, and is the only evaluation entry point (the
+scalar ``evaluate`` shim and the pre-protocol ``act``-only adapter were
+retired after their one-release deprecation window; scalar callers run
+a B=1 ``VectorProvisionEnv`` through ``evaluate_batch`` instead). Under
+a faulted scenario it also reports per-lane fault/requeue counts and the
+policy's fallback count, so Fig-8/9 style grids can show every method's
+behaviour under failures.
 """
 from __future__ import annotations
 
@@ -121,7 +126,8 @@ def train_online_dqn(env: ProvisionEnv, learner: DQNLearner,
     buf = ReplayBuffer(replay_capacity, learner.fc.history, STATE_DIM, seed)
     returns: List[float] = []
     B = batch or min(episodes, 8)
-    cache = env.cache or ReplayCheckpointCache(env.trace, env.cfg.n_nodes)
+    cache = env.cache or ReplayCheckpointCache(env.trace, env.cfg.n_nodes,
+                                               faults=env.cfg.faults)
     while len(returns) < episodes:
         b = min(B, episodes - len(returns))
         venv = VectorProvisionEnv(env.trace, env.cfg, b,
@@ -144,7 +150,8 @@ def train_online_pg(env: ProvisionEnv, learner: PGLearner,
                     batch: Optional[int] = None) -> List[float]:
     returns: List[float] = []
     B = batch or min(episodes, 8)
-    cache = env.cache or ReplayCheckpointCache(env.trace, env.cfg.n_nodes)
+    cache = env.cache or ReplayCheckpointCache(env.trace, env.cfg.n_nodes,
+                                               faults=env.cfg.faults)
     while len(returns) < episodes:
         b = min(B, episodes - len(returns))
         venv = VectorProvisionEnv(env.trace, env.cfg, b,
@@ -166,6 +173,12 @@ class EvalResult:
     interruptions_h: List[float]
     overlaps_h: List[float]
     waits_h: List[float]
+    # robustness accounting (all zeros on fault-free cells): per-episode
+    # node-failure / requeue counts observed during the decision window,
+    # and how often a FallbackPolicy bypassed the method
+    fault_counts: List[int] = dataclasses.field(default_factory=list)
+    requeue_counts: List[int] = dataclasses.field(default_factory=list)
+    fallbacks: int = 0
 
     @property
     def mean_interruption_h(self) -> float:
@@ -185,7 +198,10 @@ class EvalResult:
         return {"mean_interruption_h": self.mean_interruption_h,
                 "mean_overlap_h": self.mean_overlap_h,
                 "zero_interruption_frac": self.zero_interruption_frac,
-                "n_episodes": len(self.interruptions_h) + len(self.overlaps_h)}
+                "n_episodes": len(self.interruptions_h) + len(self.overlaps_h),
+                "n_faults": int(sum(self.fault_counts)),
+                "n_requeues": int(sum(self.requeue_counts)),
+                "n_fallbacks": int(self.fallbacks)}
 
 
 class LearnerPolicy(Policy):
@@ -236,22 +252,6 @@ def _policy_method(policy) -> str:
     return getattr(policy, "method", getattr(policy, "name", "policy"))
 
 
-class _ScalarActAdapter(Policy):
-    """Back-compat (one release, like the ``evaluate`` shim): lifts a
-    pre-protocol duck-typed policy exposing only ``act(obs)`` into the
-    batched protocol, one lane at a time."""
-
-    def __init__(self, inner):
-        self._inner = inner
-        self.method = _policy_method(inner)
-
-    def act_batch(self, obs: Dict) -> np.ndarray:
-        B = len(np.asarray(obs["pred_remaining"]))
-        return np.asarray(
-            [int(self._inner.act({k: v[i] for k, v in obs.items()}))
-             for i in range(B)], np.int64)
-
-
 def evaluate_batch(venv: VectorProvisionEnv, policy: Policy,
                    episodes: Optional[int] = None, seed: int = 0,
                    t_starts: Optional[Sequence[float]] = None) -> EvalResult:
@@ -269,8 +269,15 @@ def evaluate_batch(venv: VectorProvisionEnv, policy: Policy,
     Policy hooks: ``reset_lanes`` fires when a chunk begins;
     ``observe(infos)`` fires once per finished chunk with the B final
     infos — so within a chunk every lane acts under the same policy
-    state (stateful policies like ``avg`` update between chunks, exactly
-    like the B=1 scalar shim updates between episodes).
+    state (stateful policies like ``avg`` update between chunks; with a
+    B=1 env that degenerates to updating between episodes, the legacy
+    scalar-loop cadence).
+
+    Robustness accounting: each final info's ``n_faults``/``n_requeues``
+    (node failures / Slurm-style requeues observed during the decision
+    window — zero on fault-free cells) land in ``fault_counts`` /
+    ``requeue_counts``, and a ``FallbackPolicy`` wrapper's running
+    ``n_fallbacks`` is copied into the result.
     """
     if t_starts is None:
         episodes = venv.batch if episodes is None else int(episodes)
@@ -299,40 +306,10 @@ def evaluate_batch(venv: VectorProvisionEnv, policy: Policy,
             else:
                 res.overlaps_h.append(info["amount_s"] / HOUR)
             res.waits_h.append(info.get("wait_s", 0.0) / HOUR)
+            res.fault_counts.append(int(info.get("n_faults", 0)))
+            res.requeue_counts.append(int(info.get("n_requeues", 0)))
         policy.observe(finals)
-    return res
-
-
-def evaluate(env: ProvisionEnv, policy: Policy, episodes: int = 20,
-             seed: int = 0,
-             t_starts: Optional[Sequence[float]] = None) -> EvalResult:
-    """Deprecated scalar loop (one release): forwards to ``evaluate_batch``
-    with B=1 semantics — one lane, one chunk per episode, so
-    ``policy.observe`` fires after every episode exactly like the legacy
-    per-episode ``observe_wait`` plumbing. With ``env.cache`` set the lane
-    forks warm from it across episodes; without one, a single-use cache
-    with checkpointing disabled stands in, so every episode still pays a
-    trace-head replay like the legacy loop (attach a ReplayCheckpointCache
-    via ``ProvisionEnv(..., cache=...)`` to stop re-paying it). Either way
-    one lane env serves the whole call, so the per-episode chain draws
-    advance one rng stream — outcomes are identical across both branches."""
-    if not hasattr(policy, "act_batch"):      # pre-protocol act-only duck
-        policy = _ScalarActAdapter(policy)
-    if t_starts is None:
-        lo, hi = env._t_start_range
-        t_starts = np.random.default_rng(seed).uniform(lo, hi, episodes)
-    res = EvalResult(_policy_method(policy), [], [], [])
-    cache = env.cache
-    if cache is None:
-        cache = ReplayCheckpointCache(env.trace, env.cfg.n_nodes,
-                                      interval=float("inf"))
-    venv = VectorProvisionEnv(env.trace, env.cfg, 1, seed=env.seed,
-                              cache=cache)
-    for t0 in np.asarray(t_starts, np.float64):
-        part = evaluate_batch(venv, policy, t_starts=[t0])
-        res.interruptions_h += part.interruptions_h
-        res.overlaps_h += part.overlaps_h
-        res.waits_h += part.waits_h
+    res.fallbacks = int(getattr(policy, "n_fallbacks", 0))
     return res
 
 

@@ -1,0 +1,368 @@
+"""Self-healing provisioning control plane (robustness layer).
+
+The data plane (simulator + policy) decides *when* to submit; this module
+makes the *act of provisioning* survive the failures a real batch cluster
+throws at it:
+
+* ``RetryPolicy`` — seeded-jitter exponential backoff with a wall-clock
+  deadline around transient control errors. Retries consume wall time
+  only (``sleep``/``clock`` are injectable), never simulated time, so a
+  retried submission lands at the same simulated instant as a clean one
+  — the schedule is invariant to the error sequence.
+* ``ControlPlane`` — fault-injectable submit/cancel facade over a
+  simulator: the k-th control operation sees
+  ``FaultPlan.ctrl_failures(k)`` transient errors before succeeding.
+  Because that count is a pure function of ``(ctrl_seed, k)``, a
+  restarted driver replays the exact error sequence it saw before the
+  crash.
+* ``DecisionJournal`` — crash-safe append-only msgpack log of every
+  provisioning decision, flushed + fsynced per record. A torn trailing
+  record (crash mid-write) is tolerated on replay.
+* ``ChainDriver`` — drives a k-link sub-job chain end to end on a
+  ``ProvisionEnv``: per decision interval it consults a
+  ``FallbackPolicy``-wrapped policy (graceful degradation to the
+  reactive heuristic on exceptions / deadline overruns), journals the
+  decision, and submits each successor through the retried control
+  plane. Killed mid-chain (``PreemptionGuard.trigger()``), a fresh
+  driver pointed at the same journal replays the logged decisions
+  without consulting the policy, reconstructs the identical simulator
+  state, and resumes — the final schedule is bit-identical to an
+  uninterrupted run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import msgpack
+import numpy as np
+
+from repro.sim.faults import FaultPlan
+from repro.sim.trace import Job
+from repro.sim.workload import pair_outcome
+from repro.train.fault import PreemptionGuard
+from .policy import FallbackPolicy, Policy, batch_obs
+from .provisioner import EnvConfig, ProvisionEnv, ReplayCheckpointCache
+from .reward import shape_reward
+
+HOUR = 3600.0
+
+#: journal format version (header record)
+JOURNAL_VERSION = 1
+
+
+class TransientControlError(RuntimeError):
+    """A control-plane operation (submit/cancel) failed transiently and
+    may be retried."""
+
+
+class RetryPolicy:
+    """Seeded-jitter exponential backoff with a deadline.
+
+    ``call(fn)`` invokes ``fn`` until it succeeds, retrying on
+    ``TransientControlError`` with delay ``min(base * 2**k, max) *
+    (0.5 + u)`` for a seeded uniform ``u`` — jittered so a fleet of
+    drivers doesn't thundering-herd the controller, seeded so tests are
+    deterministic. Gives up (re-raising) after ``max_attempts`` attempts
+    or once the next delay would overrun ``deadline_s`` of wall time.
+    ``sleep``/``clock`` are injectable; simulated time is never touched.
+    """
+
+    def __init__(self, max_attempts: int = 6, base_delay_s: float = 0.05,
+                 max_delay_s: float = 2.0, deadline_s: float = 30.0,
+                 seed: int = 0,
+                 sleep: Callable[[float], None] = time.sleep,
+                 clock: Callable[[], float] = time.monotonic):
+        assert max_attempts >= 1
+        self.max_attempts = max_attempts
+        self.base_delay_s = base_delay_s
+        self.max_delay_s = max_delay_s
+        self.deadline_s = deadline_s
+        self._rng = np.random.default_rng(seed)
+        self._sleep = sleep
+        self._clock = clock
+
+    def call(self, fn: Callable[[], object], op_name: str = "op"
+             ) -> Tuple[object, int]:
+        """Run ``fn`` with retries; returns ``(result, n_retries)``."""
+        t0 = self._clock()
+        attempt = 0
+        while True:
+            try:
+                return fn(), attempt
+            except TransientControlError:
+                attempt += 1
+                if attempt >= self.max_attempts:
+                    raise
+                d = min(self.base_delay_s * 2.0 ** (attempt - 1),
+                        self.max_delay_s)
+                d *= 0.5 + float(self._rng.random())
+                if self._clock() - t0 + d > self.deadline_s:
+                    raise
+                self._sleep(d)
+
+
+class ControlPlane:
+    """Fault-injectable submit/cancel facade over a ``SlurmSimulator``.
+
+    Operations are numbered in issue order; operation ``k`` raises
+    ``TransientControlError`` exactly ``plan.ctrl_failures(k)`` times
+    before taking effect (the error is checked *before* the simulator
+    mutates, so a failed attempt is side-effect free). With no plan (or
+    ``ctrl_error_rate == 0``) every operation succeeds first try.
+    """
+
+    def __init__(self, faults: Optional[FaultPlan],
+                 retry: Optional[RetryPolicy] = None):
+        self.faults = faults
+        self.retry = retry or RetryPolicy()
+        self.n_ops = 0
+        self.n_errors = 0
+        self.n_retries = 0
+
+    def _attempts(self, op: int) -> int:
+        if self.faults is None:
+            return 0
+        return self.faults.ctrl_failures(op)
+
+    def _op(self, fn: Callable[[], object], name: str) -> object:
+        op = self.n_ops
+        self.n_ops += 1
+        state = {"left": self._attempts(op)}
+
+        def attempt():
+            if state["left"] > 0:
+                state["left"] -= 1
+                self.n_errors += 1
+                raise TransientControlError(f"{name} #{op}")
+            return fn()
+
+        result, retries = self.retry.call(attempt, op_name=name)
+        self.n_retries += retries
+        return result
+
+    def submit(self, sim, job: Job) -> None:
+        self._op(lambda: sim.submit(job), "submit")
+
+    def cancel(self, sim, job_id: int) -> bool:
+        return bool(self._op(lambda: sim.cancel(job_id), "cancel"))
+
+
+class DecisionJournal:
+    """Crash-safe append-only msgpack decision log.
+
+    Each ``append`` packs one record and flush+fsyncs it, so a record is
+    either fully on disk or absent; a crash mid-write leaves at most one
+    torn trailing record, which ``replay`` silently drops. The first
+    record is a header pinning (version, seed, links) — resuming with a
+    mismatched configuration is an error, not silent divergence.
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+
+    def append(self, record: Dict) -> None:
+        with open(self.path, "ab") as f:
+            f.write(msgpack.packb(record, use_bin_type=True))
+            f.flush()
+            os.fsync(f.fileno())
+
+    def replay(self) -> List[Dict]:
+        """All complete records on disk, in append order."""
+        if not os.path.exists(self.path):
+            return []
+        out: List[Dict] = []
+        with open(self.path, "rb") as f:
+            unpacker = msgpack.Unpacker(f, raw=False)
+            while True:
+                try:
+                    out.append(next(unpacker))
+                except StopIteration:
+                    break
+                except Exception:      # torn tail from a mid-write crash
+                    break
+        return out
+
+
+@dataclasses.dataclass
+class ChainResult:
+    """Outcome of one ``ChainDriver.run``."""
+    reason: str                               # "completed" | "preempted"
+    outcomes: List[Dict]                      # one per submitted link
+    schedule: List[Tuple[int, float, float]]  # (job_id, start, end) per sub
+    n_decisions: int = 0
+    n_replayed: int = 0
+    n_fallbacks: int = 0
+    n_retries: int = 0
+    n_ctrl_errors: int = 0
+    n_faults: int = 0
+    n_requeues: int = 0
+
+    @property
+    def interruption_h(self) -> float:
+        return sum(o["amount_s"] for o in self.outcomes
+                   if o["kind"] == "interrupt") / HOUR
+
+    @property
+    def overlap_h(self) -> float:
+        return sum(o["amount_s"] for o in self.outcomes
+                   if o["kind"] == "overlap") / HOUR
+
+
+class ChainDriver:
+    """Drives a ``links``-link sub-job chain with journaled decisions.
+
+    Reuses ``ProvisionEnv``'s episode machinery (warm-up, history window,
+    observation encoding) but rolls the chain forward instead of ending
+    after one pair: once link ``i``'s successor starts, it becomes the
+    next link's predecessor and the decision loop continues.
+
+    Determinism contract: given the same ``(trace, cfg, seed, links,
+    t_start)``, the sequence of *applied* decisions fully determines the
+    final schedule — policy consultation, retries and fallbacks only
+    choose or delay decisions in wall-clock time, never simulated time.
+    So a driver killed mid-chain and restarted against the same journal
+    replays the logged decisions verbatim (no policy calls, counted in
+    ``n_replayed``) and produces a schedule identical to an uninterrupted
+    run.
+    """
+
+    def __init__(self, trace: Sequence[Job], cfg: EnvConfig, policy: Policy,
+                 links: int = 3, seed: int = 0,
+                 journal: Optional[DecisionJournal] = None,
+                 guard: Optional[PreemptionGuard] = None,
+                 retry: Optional[RetryPolicy] = None,
+                 cache: Optional[ReplayCheckpointCache] = None,
+                 decision_deadline_s: Optional[float] = None):
+        assert links >= 1
+        self.env = ProvisionEnv(trace, cfg, seed=seed, cache=cache)
+        self.policy = (policy if isinstance(policy, FallbackPolicy)
+                       else FallbackPolicy(policy,
+                                           deadline_s=decision_deadline_s))
+        self.links = links
+        self.seed = seed
+        self.journal = journal
+        self.guard = guard or PreemptionGuard(install_signals=False)
+        self.ctrl = ControlPlane(cfg.faults, retry=retry)
+
+    # ------------------------------------------------------------ helpers
+    def _check_header(self, replayed: List[Dict]) -> List[Dict]:
+        if not replayed:
+            return []
+        hdr = replayed[0]
+        if (hdr.get("v") != JOURNAL_VERSION or hdr.get("seed") != self.seed
+                or hdr.get("links") != self.links):
+            raise ValueError(
+                f"journal header {hdr} does not match driver config "
+                f"(seed={self.seed}, links={self.links})")
+        return replayed[1:]
+
+    def _pred_end(self) -> float:
+        pred = self.env.pred
+        if pred.start_time < 0:      # fault-killed, still queued: unknown end
+            return float("inf")
+        return pred.start_time + min(pred.runtime, pred.time_limit)
+
+    def _submit_link(self, link: int, forced: bool) -> Dict:
+        """Submit link ``link``'s sub-job through the retried control
+        plane, run it to start, score it against its predecessor, and
+        roll the chain forward (successor becomes the next predecessor)."""
+        env = self.env
+        started = env.pred.start_time >= 0
+        pred_end = self._pred_end()
+        t_sub = (max(env.sim.now, pred_end) if forced and started
+                 else env.sim.now)
+        env.sim.run_until(t_sub)
+        succ = env.chain.make_sub(link, t_sub)
+        retries0, errors0 = self.ctrl.n_retries, self.ctrl.n_errors
+        self.ctrl.submit(env.sim, succ)
+        wait = env.sim.run_until_started(succ)
+        pred = env.pred
+        if pred.end_time < 0:
+            if pred.start_time >= 0:
+                pred.end_time = pred.start_time + min(pred.runtime,
+                                                      pred.time_limit)
+            else:
+                pred.end_time = t_sub      # killed, never restarted
+        kind, amount = pair_outcome(pred, succ)
+        r = shape_reward(kind, amount, env.cfg.reward)
+        info = {"link": link, "kind": kind, "amount_s": amount,
+                "wait_s": wait, "forced": forced, "reward": r,
+                "pred_id": pred.job_id, "succ_id": succ.job_id,
+                "n_retries": self.ctrl.n_retries - retries0,
+                "n_ctrl_errors": self.ctrl.n_errors - errors0}
+        # the chain rolls forward: the successor is the next predecessor
+        env.pred = succ
+        env.succ = None
+        env._fc0 = (env.sim.n_node_failures, env.sim.n_requeues)
+        return info
+
+    # ---------------------------------------------------------------- run
+    def run(self, t_start: Optional[float] = None) -> ChainResult:
+        """Run the chain to completion (or preemption). ``t_start`` pins
+        the first link's episode start; by default it is drawn from the
+        env's seeded rng (deterministic per seed, so restarts re-draw the
+        identical instant)."""
+        env = self.env
+        records = self.journal.replay() if self.journal else []
+        replayed = self._check_header(records)
+        if self.journal and not records:
+            # fresh journal: write the header before the first decision
+            self.journal.append({"v": JOURNAL_VERSION, "seed": self.seed,
+                                 "links": self.links})
+        obs = env.reset(t_start=t_start)
+        self._seen: Dict[int, Tuple[float, float]] = {}
+        outcomes: List[Dict] = []
+        n_decisions = n_replayed = n_fallbacks = 0
+        di = 0
+        reason = "completed"
+        for link in range(1, self.links + 1):
+            while True:
+                if di < len(replayed):
+                    rec = replayed[di]
+                    action, fell_back = int(rec["a"]), bool(rec["fb"])
+                    n_replayed += 1
+                else:
+                    if self.guard.should_stop():
+                        reason = "preempted"
+                        break
+                    fb0 = self.policy.n_fallbacks
+                    action = int(self.policy.act_batch(batch_obs(obs))[0])
+                    fell_back = self.policy.n_fallbacks > fb0
+                    if self.journal:
+                        self.journal.append({"i": di, "a": action,
+                                             "fb": fell_back})
+                di += 1
+                n_decisions += 1
+                n_fallbacks += int(fell_back)
+                forced = (action == 0
+                          and env.sim.now + env.cfg.interval
+                          >= self._pred_end())
+                if action == 1 or forced:
+                    pred = env.pred
+                    info = self._submit_link(link, forced)
+                    self._seen[pred.job_id] = (pred.start_time, pred.end_time)
+                    outcomes.append(info)
+                    obs = env.obs()
+                    break
+                env._advance(env.cfg.interval)
+                obs = env.obs()
+            if reason == "preempted":
+                break
+        # project the live tail link into the schedule
+        tail = env.pred
+        if tail is not None and tail.job_id not in self._seen:
+            end = (tail.start_time + min(tail.runtime, tail.time_limit)
+                   if tail.start_time >= 0 else -1.0)
+            self._seen[tail.job_id] = (tail.start_time, end)
+        return ChainResult(
+            reason=reason, outcomes=outcomes,
+            schedule=sorted((jid, st, en)
+                            for jid, (st, en) in self._seen.items()),
+            n_decisions=n_decisions, n_replayed=n_replayed,
+            n_fallbacks=n_fallbacks, n_retries=self.ctrl.n_retries,
+            n_ctrl_errors=self.ctrl.n_errors,
+            n_faults=env.sim.n_node_failures,
+            n_requeues=env.sim.n_requeues)

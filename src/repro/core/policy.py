@@ -17,10 +17,16 @@ The scalar ``act(obs)`` adapter lifts a single-episode observation dict
 to a B=1 batch, so interactive callers (examples stepping one episode by
 hand) keep a one-line interface while every policy runs the same batched
 code path.
+
+``FallbackPolicy`` wraps any Policy with graceful degradation: if the
+inner ``act_batch`` raises, or overruns a wall-clock decision deadline,
+that interval's decision falls back to the reactive heuristic and the
+fallback is counted — serving stays up when the learner misbehaves.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+import time
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
@@ -50,3 +56,50 @@ class Policy:
     def act(self, obs: Dict) -> int:
         """Scalar adapter: one episode's obs dict -> one action."""
         return int(self.act_batch(batch_obs(obs))[0])
+
+
+class FallbackPolicy(Policy):
+    """Graceful degradation around any Policy (the serving-side half of
+    the self-healing control plane).
+
+    Each ``act_batch`` call delegates to the wrapped policy; if it raises
+    any exception, or ``deadline_s`` is set and the call overruns it
+    (measured on ``clock``, injectable for tests), the whole interval's
+    decision falls back to the reactive heuristic — submit exactly when
+    the predecessor's limit has expired (``pred_remaining <= 0``), the
+    same rule as ``baselines.ReactivePolicy`` (inlined to stay import-
+    cycle-free). Fallbacks are counted in ``n_fallbacks`` / ``n_decisions``
+    so evaluation results can report how often the learner was bypassed.
+    """
+
+    def __init__(self, inner: Policy, deadline_s: Optional[float] = None,
+                 clock: Callable[[], float] = time.monotonic):
+        self.inner = inner
+        self.method = f"{getattr(inner, 'method', 'policy')}+fallback"
+        self.deadline_s = deadline_s
+        self.clock = clock
+        self.n_decisions = 0
+        self.n_fallbacks = 0
+
+    @staticmethod
+    def _reactive(obs: Dict) -> np.ndarray:
+        return (np.asarray(obs["pred_remaining"]) <= 0.0).astype(np.int64)
+
+    def act_batch(self, obs: Dict) -> np.ndarray:
+        self.n_decisions += 1
+        t0 = self.clock()
+        try:
+            acts = np.asarray(self.inner.act_batch(obs), np.int64)
+        except Exception:
+            self.n_fallbacks += 1
+            return self._reactive(obs)
+        if self.deadline_s is not None and self.clock() - t0 > self.deadline_s:
+            self.n_fallbacks += 1
+            return self._reactive(obs)
+        return acts
+
+    def reset_lanes(self, mask: np.ndarray) -> None:
+        self.inner.reset_lanes(mask)
+
+    def observe(self, infos: List[Optional[Dict]]) -> None:
+        self.inner.observe(infos)

@@ -44,6 +44,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.sim.faults import FaultPlan
 from repro.sim.simulator import SlurmSimulator, sample_batch
 from repro.sim.trace import Job
 from repro.sim.workload import SubJobChain, pair_outcome
@@ -65,6 +66,9 @@ class EnvConfig:
     interval: float = SAMPLE_INTERVAL
     warmup: float = 2 * DAY
     reward: RewardConfig = dataclasses.field(default_factory=RewardConfig)
+    # deterministic fault schedule threaded into every simulator the env
+    # (or its checkpoint cache) builds; None == fault-free
+    faults: Optional[FaultPlan] = None
 
 
 class ProvisionEnv:
@@ -82,6 +86,7 @@ class ProvisionEnv:
         self.pred: Optional[Job] = None
         self.succ: Optional[Job] = None
         self.chain: Optional[SubJobChain] = None
+        self._fc0 = (0, 0)       # fault/requeue counters at episode start
         self._t_start_range = (
             trace[0].submit_time + cfg.warmup,
             max(trace[-1].submit_time - 3 * cfg.sub_limit,
@@ -137,7 +142,8 @@ class ProvisionEnv:
             # forks are bit-identical to a fresh replay — cache contract)
             sim = self.cache.fork_at(self.warmup_point(t0))
         else:
-            sim = SlurmSimulator(self.cfg.n_nodes, mode="fast")
+            sim = SlurmSimulator(self.cfg.n_nodes, mode="fast",
+                                 faults=self.cfg.faults)
             sim.load([copy.copy(j) for j in self.trace])
         return self._begin_episode(sim, t0)
 
@@ -160,14 +166,18 @@ class ProvisionEnv:
         self.pred = self.chain.make_sub(0, self.sim.now)
         self.sim.submit(self.pred)
         self.sim.run_until_started(self.pred)
+        self._fc0 = (self.sim.n_node_failures, self.sim.n_requeues)
         self.hist.push(self._snapshot())
         return self.obs()
 
     def step(self, action: int) -> Tuple[Dict, float, bool, Dict]:
         """action: 1=submit successor, 0=wait. Returns (obs, reward, done, info)."""
         assert self.pred is not None and self.succ is None
-        pred_end = self.pred.start_time + min(self.pred.runtime,
-                                              self.pred.time_limit)
+        # a fault-killed (requeued, not yet restarted) predecessor has no
+        # known end: it cannot force a reactive submission until restarted
+        pred_end = (self.pred.start_time + min(self.pred.runtime,
+                                               self.pred.time_limit)
+                    if self.pred.start_time >= 0 else float("inf"))
         forced = False
         if action == 0:
             if self.sim.now + self.cfg.interval >= pred_end:
@@ -183,19 +193,33 @@ class ProvisionEnv:
         run it to start, and score the episode outcome. Shared by the
         scalar step and the vector env's batched step (which serves the
         final observation from its own ring instead of ``obs()``)."""
-        pred_end = self.pred.start_time + min(self.pred.runtime,
-                                              self.pred.time_limit)
-        t_sub = max(self.sim.now, pred_end if forced else self.sim.now)
+        started = self.pred.start_time >= 0
+        pred_end = (self.pred.start_time + min(self.pred.runtime,
+                                               self.pred.time_limit)
+                    if started else float("inf"))
+        t_sub = max(self.sim.now, pred_end if forced and started
+                    else self.sim.now)
         self.sim.run_until(t_sub)
         self.succ = self.chain.make_sub(1, t_sub)
         self.sim.submit(self.succ)
         wait = self.sim.run_until_started(self.succ)
         if self.pred.end_time < 0:
-            self.pred.end_time = pred_end
+            if self.pred.start_time >= 0:
+                # the predecessor (original or fault-requeued restart)
+                # runs to its limit from its current start
+                self.pred.end_time = self.pred.start_time + min(
+                    self.pred.runtime, self.pred.time_limit)
+            else:
+                # killed and still queued when the successor went in: the
+                # service has been down since before the submission
+                self.pred.end_time = t_sub
         kind, amount = pair_outcome(self.pred, self.succ)
         r = shape_reward(kind, amount, self.cfg.reward)
+        f0, rq0 = self._fc0
         return r, {"kind": kind, "amount_s": amount, "wait_s": wait,
-                   "forced": forced}
+                   "forced": forced,
+                   "n_faults": self.sim.n_node_failures - f0,
+                   "n_requeues": self.sim.n_requeues - rq0}
 
 
 def _sim_nbytes(sim: SlurmSimulator) -> int:
@@ -233,12 +257,14 @@ class ReplayCheckpointCache:
     """
 
     def __init__(self, trace: Sequence[Job], n_nodes: int, mode: str = "fast",
-                 interval: float = 6 * HOUR, max_bytes: int = 256 << 20):
+                 interval: float = 6 * HOUR, max_bytes: int = 256 << 20,
+                 faults: Optional[FaultPlan] = None):
         assert interval > 0
         self.trace = trace
         self.interval = interval
         self.max_bytes = max_bytes
-        self._frontier = SlurmSimulator(n_nodes, mode=mode)
+        self.faults = faults
+        self._frontier = SlurmSimulator(n_nodes, mode=mode, faults=faults)
         self._frontier.load([copy.copy(j) for j in trace])
         self._times: List[float] = []
         self._sims: List[SlurmSimulator] = []
@@ -271,7 +297,7 @@ class ReplayCheckpointCache:
         # no checkpoint early enough (evicted): fresh short replay
         self.misses += 1
         sim = SlurmSimulator(self._frontier.cluster.n_nodes,
-                             mode=self._frontier.mode)
+                             mode=self._frontier.mode, faults=self.faults)
         sim.load([copy.copy(j) for j in self.trace])
         sim.run_until(t)
         return sim
@@ -327,7 +353,11 @@ class VectorProvisionEnv:
         self.envs = [ProvisionEnv(trace, cfg, seed=seed + i)
                      for i in range(batch)]
         self.cache = cache if cache is not None else ReplayCheckpointCache(
-            trace, cfg.n_nodes)
+            trace, cfg.n_nodes, faults=cfg.faults)
+        # under faults the predecessor is mutable (kill/requeue/restart):
+        # the cached per-lane pred columns must be re-synced from the Job
+        # objects each step. Fault-free envs never take that path.
+        self._faulted = cfg.faults is not None and len(cfg.faults) > 0
         self.dones = np.ones(batch, bool)      # not yet reset
         k = cfg.history
         self._hist = StateHistoryBatch(batch, k)
@@ -344,6 +374,7 @@ class VectorProvisionEnv:
         self._pred_qtime = np.zeros(batch, np.float64)
         self._pred_start = np.full(batch, -1.0, np.float64)
         self._pred_end = np.zeros(batch, np.float64)
+        self._pred_rt = np.zeros(batch, np.float64)
         self._succ_cols = np.broadcast_to(
             np.array([float(cfg.chain_nodes), cfg.sub_limit], np.float64),
             (batch, 2))
@@ -390,6 +421,29 @@ class VectorProvisionEnv:
             self._pred_start[lanes] + self._pred_limit[lanes] - nows,
             self.cfg.sub_limit)
         self._time_pos[lanes] = (nows - self._trace_t0) / self._trace_span
+
+    def _sync_pred_state(self, lanes: np.ndarray) -> None:
+        """Faulted envs only: refresh the cached per-lane predecessor
+        columns from the Job objects, which a node failure can mutate
+        (kill resets start to -1; a later restart sets it anew). Matches
+        the scalar env, which reads the live attrs every step. A down
+        predecessor has no known end (inf): it cannot force a reactive
+        submission until it restarts."""
+        if not lanes.size:
+            return
+        starts = np.fromiter(
+            (self.envs[int(i)].pred.start_time for i in lanes),
+            np.float64, lanes.size)
+        self._pred_start[lanes] = starts
+        self._pred_qtime[lanes] = np.where(
+            starts >= 0,
+            np.fromiter((self.envs[int(i)].pred.wait_time for i in lanes),
+                        np.float64, lanes.size).clip(min=0.0), 0.0)
+        self._pred_end[lanes] = np.where(
+            starts >= 0,
+            starts + np.minimum(self._pred_rt[lanes],
+                                self._pred_limit[lanes]),
+            np.inf)
 
     @property
     def _t_start_range(self) -> Tuple[float, float]:
@@ -442,10 +496,12 @@ class VectorProvisionEnv:
             env.pred = env.chain.make_sub(0, env.sim.now)
             env.sim.submit(env.pred)
             env.sim.run_until_started(env.pred)
+            env._fc0 = (env.sim.n_node_failures, env.sim.n_requeues)
             self._pred_size[i] = env.pred.n_nodes
             self._pred_limit[i] = env.pred.time_limit
             self._pred_qtime[i] = max(env.pred.wait_time, 0.0)
             self._pred_start[i] = env.pred.start_time
+            self._pred_rt[i] = env.pred.runtime
             self._pred_end[i] = env.pred.start_time + min(
                 env.pred.runtime, env.pred.time_limit)
         self._has_pred[:] = True
@@ -462,6 +518,8 @@ class VectorProvisionEnv:
         live = np.flatnonzero(~self.dones)
         if not live.size:
             return self._obs_view(), rewards, self.dones.copy(), infos
+        if self._faulted:
+            self._sync_pred_state(live)
         nows = np.fromiter((self.envs[int(i)].sim.now for i in live),
                            np.float64, live.size)
         forced = (actions[live] == 0) & (
@@ -480,6 +538,10 @@ class VectorProvisionEnv:
         # waiting lanes advance one interval and push one batched slab
         for i in wait_idx:
             self.envs[int(i)].sim.step(self.cfg.interval)
+        if self._faulted:
+            # the advance (and the successor waits above) may have killed
+            # or restarted predecessors: re-sync before encoding/serving
+            self._sync_pred_state(live)
         if wait_idx.size:
             self._hist.push(self._encode_lanes(wait_idx), wait_idx)
         self._refresh_obs(np.concatenate([wait_idx, sub_idx]))
@@ -506,43 +568,51 @@ def collect_offline_samples(env: ProvisionEnv, n_episodes: int,
     lanes = [(ep, p) for ep in range(n_episodes) for p in range(n_points)]
     out: List[Optional[Dict]] = [None] * len(lanes)
     B = batch or min(len(lanes), 32)
-    cache = env.cache or ReplayCheckpointCache(env.trace, env.cfg.n_nodes)
+    cache = env.cache or ReplayCheckpointCache(env.trace, env.cfg.n_nodes,
+                                               faults=env.cfg.faults)
     for c0 in range(0, len(lanes), B):
         chunk = lanes[c0:c0 + B]
-        venv = VectorProvisionEnv(env.trace, env.cfg, len(chunk),
+        n = len(chunk)
+        venv = VectorProvisionEnv(env.trace, env.cfg, n,
                                   seed=seed + c0, cache=cache)
         obs = venv.reset(t_starts=[ep_t0[ep] for ep, _ in chunk])
-        targets = [venv.envs[i].pred.start_time
-                   + ((p + 0.5) / n_points) * env.cfg.sub_limit
-                   for i, (_, p) in enumerate(chunk)]
+        fracs = np.array([(p + 0.5) / n_points for _, p in chunk],
+                         np.float64)
+        targets = np.fromiter(
+            (venv.envs[i].pred.start_time for i in range(n)),
+            np.float64, n) + fracs * env.cfg.sub_limit
         # per lane: the observation after the last wait step feeds the
         # sample; the reward comes from the (possibly forced) submission.
-        # obs arrays are views of the env's persistent buffers -> copy
-        # anything retained across steps.
-        mats = [obs["matrix"][i].copy() for i in range(len(chunk))]
-        tps = [float(obs["time_pos"][i]) for i in range(len(chunk))]
+        # obs arrays are views of the env's persistent buffers -> copied
+        # wholesale; a lane's rows freeze once it stops waiting.
+        mats = obs["matrix"].copy()
+        tps = obs["time_pos"].copy()
+        rewards = np.zeros(n, np.float64)
+        kinds = [""] * n
+        waits = np.zeros(n, np.float64)
         while not venv.dones.all():
-            acts = []
-            for i, e in enumerate(venv.envs):
-                wait = (not venv.dones[i]
-                        and e.sim.now + e.cfg.interval < targets[i])
-                acts.append(0 if wait else 1)
+            nows = np.fromiter((e.sim.now for e in venv.envs),
+                               np.float64, n)
+            acts = np.where(~venv.dones
+                            & (nows + env.cfg.interval < targets), 0, 1)
             was_done = venv.dones.copy()
             nobs, r, dones, infos = venv.step(acts)
-            for i, (ep, p) in enumerate(chunk):
-                if was_done[i]:
-                    continue
-                if dones[i]:
-                    m = mats[i]
-                    out[c0 + i] = {
-                        "matrix": m,
-                        "summary": summary_features(m),
-                        "reward": float(r[i]),
-                        "kind": infos[i].get("kind", ""),
-                        "wait_s": infos[i].get("wait_s", 0.0),
-                        "time_pos": tps[i],
-                    }
-                else:       # still waiting: roll the pre-submit obs
-                    mats[i] = nobs["matrix"][i].copy()
-                    tps[i] = float(nobs["time_pos"][i])
+            newly = ~was_done & dones
+            waiting = ~was_done & ~dones
+            rewards[newly] = r[newly]
+            for i in np.flatnonzero(newly).tolist():
+                kinds[i] = infos[i].get("kind", "")
+                waits[i] = float(infos[i].get("wait_s", 0.0))
+            # still-waiting lanes roll their pre-submit obs forward
+            mats[waiting] = nobs["matrix"][waiting]
+            tps[waiting] = nobs["time_pos"][waiting]
+        for i in range(n):      # boundary: materialize the sample dicts
+            out[c0 + i] = {
+                "matrix": mats[i],
+                "summary": summary_features(mats[i]),
+                "reward": float(rewards[i]),
+                "kind": kinds[i],
+                "wait_s": waits[i],
+                "time_pos": float(tps[i]),
+            }
     return [s for s in out if s is not None]

@@ -7,6 +7,13 @@
 Runs the paper's full §4.9 procedure on a freshly synthesized (seeded)
 trace: offline sample collection -> foundation pretraining -> online RL ->
 validation-split evaluation against the reactive baseline.
+
+Robustness flags: ``--fault faulty`` threads the named fault profile's
+deterministic FaultPlan (node failures + transient control errors)
+through every simulator, and ``--chain-links N --journal PATH`` runs the
+trained policy through the self-healing ChainDriver — retried submits,
+reactive fallback on policy failure, and a crash-safe decision journal
+(rerunning with the same journal resumes instead of restarting).
 """
 from __future__ import annotations
 
@@ -30,21 +37,37 @@ def main():
     ap.add_argument("--nodes", type=int, default=1, help="chain job size")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--save-agent", default=None)
+    ap.add_argument("--fault", default="",
+                    help="fault profile name ('' = fault-free)")
+    ap.add_argument("--chain-links", type=int, default=0,
+                    help="also drive an N-link chain through ChainDriver")
+    ap.add_argument("--journal", default=None,
+                    help="decision-journal path for the chain driver")
     args = ap.parse_args()
 
-    from repro.core import (EnvConfig, ProvisionEnv, ReplayCheckpointCache,
+    from repro.core import (ChainDriver, DecisionJournal, EnvConfig,
+                            ProvisionEnv, ReplayCheckpointCache,
                             VectorProvisionEnv, build_policy, evaluate_batch)
     from repro.core.provisioner import collect_offline_samples
-    from repro.sim import synthesize_trace, split_trace
+    from repro.sim import get_fault_spec, synthesize_trace, split_trace
     from repro.sim.trace import PROFILES
 
     profile = PROFILES[args.cluster]
     jobs = synthesize_trace(profile, months=args.months, seed=args.seed,
                             load_scale=args.load)
     train_jobs, val_jobs = split_trace(jobs, 0.8)
+    spec = get_fault_spec(args.fault)
+    faults = None
+    if spec is not None:
+        horizon = jobs[-1].submit_time + 3 * 24 * 3600.0
+        faults = spec.make_plan(horizon, profile.n_nodes, args.seed)
+        print(f"[provision] fault profile {args.fault}: "
+              f"{len(faults) // 2} failure windows, "
+              f"ctrl error rate {faults.ctrl_error_rate}")
     ecfg = EnvConfig(n_nodes=profile.n_nodes, history=args.history,
-                     interval=args.interval, chain_nodes=args.nodes)
-    cache = ReplayCheckpointCache(jobs, profile.n_nodes)
+                     interval=args.interval, chain_nodes=args.nodes,
+                     faults=faults)
+    cache = ReplayCheckpointCache(jobs, profile.n_nodes, faults=faults)
     env_train = ProvisionEnv(jobs, ecfg, seed=args.seed, cache=cache)
 
     t0 = time.time()
@@ -72,6 +95,19 @@ def main():
     print(f"[provision] {args.method}: {json.dumps(out['method'])}")
     print(f"[provision] reactive: {json.dumps(out['reactive'])}")
     print(f"[provision] interruption reduction vs reactive: {red:.0f}%")
+
+    if args.chain_links > 0:
+        journal = DecisionJournal(args.journal) if args.journal else None
+        driver = ChainDriver(jobs, ecfg, policy, links=args.chain_links,
+                             seed=args.seed, journal=journal, cache=cache)
+        cres = driver.run()
+        print(f"[provision] chain driver ({args.chain_links} links): "
+              f"{cres.reason}, interruption {cres.interruption_h:.2f}h, "
+              f"overlap {cres.overlap_h:.2f}h; decisions "
+              f"{cres.n_decisions} ({cres.n_replayed} replayed, "
+              f"{cres.n_fallbacks} fallbacks), ctrl errors "
+              f"{cres.n_ctrl_errors} ({cres.n_retries} retries), "
+              f"faults {cres.n_faults}, requeues {cres.n_requeues}")
 
     if args.save_agent and policy.learner is not None:
         from repro.train.checkpoint import save_checkpoint

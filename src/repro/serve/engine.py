@@ -129,7 +129,12 @@ class ServeEngine:
         return len(live)
 
     def run(self, max_ticks: int = 10_000) -> List[Request]:
-        known: List[Request] = list(self.queue)
+        # snapshot everything in flight: queued requests AND requests
+        # already admitted to slots before run() was called (previously
+        # only the queue was snapshotted, silently dropping in-flight
+        # requests from the returned list)
+        known: List[Request] = ([r for r in self.slot_req if r is not None]
+                                + list(self.queue))
         for _ in range(max_ticks):
             if not self.queue and all(r is None for r in self.slot_req):
                 break

@@ -1,4 +1,6 @@
 from .cluster import Cluster  # noqa: F401
+from .faults import (FAULT_PROFILES, FaultPlan, FaultSpec,  # noqa: F401
+                     get_fault_spec)
 from .scenarios import (CHAIN_SHAPES, LOAD_LEVELS, SCENARIOS,  # noqa: F401
                         Scenario, get_scenario, iter_scenarios)
 from .simulator import (SampleBatch, SlurmSimulator, replay,  # noqa: F401

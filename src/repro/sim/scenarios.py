@@ -2,12 +2,19 @@
 
 The paper's headline results (Figs. 8-10) come from an evaluation matrix
 — methods x clusters x load levels x chain shapes. This module names
-every cell: a ``Scenario`` is (ClusterProfile, load level, chain shape),
-registered under ``"<cluster>/<load>/<chain>"`` (e.g. ``V100/heavy/single``),
-iterable for sweeps via ``iter_scenarios``. The Fig-8/9 grid runner
-(benchmarks.bench_interruption), the examples, and ad-hoc experiments all
-draw their environments from here instead of re-declaring private
-cluster/load dicts.
+every cell: a ``Scenario`` is (ClusterProfile, load level, chain shape,
+optional fault profile), registered under ``"<cluster>/<load>/<chain>"``
+(e.g. ``V100/heavy/single``) for the fault-free grid and
+``"<cluster>/<load>/<chain>/<fault>"`` (e.g. ``V100/heavy/single/faulty``)
+for the faulted variants, iterable for sweeps via ``iter_scenarios``.
+The Fig-8/9 grid runner (benchmarks.bench_interruption), the examples,
+and ad-hoc experiments all draw their environments from here instead of
+re-declaring private cluster/load dicts.
+
+Faulted cells are deterministic: the cell's ``FaultSpec`` profile plus
+the trace horizon, cluster size and the run's seed fully determine the
+``FaultPlan`` every simulator in the cell consumes (see
+``repro.sim.faults``), so faulted results are reproducible cell-by-cell.
 
 Environment construction imports ``repro.core`` lazily, so this module
 stays importable from ``repro.sim`` without a package cycle.
@@ -17,6 +24,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Iterable, Iterator, List, Optional, Union
 
+from .faults import FAULT_PROFILES, FaultPlan, FaultSpec
 from .trace import PROFILES, ClusterProfile, Job, synthesize_trace
 
 # offered-load regimes reproducing the paper's queue-wait bands (§3.1):
@@ -36,10 +44,16 @@ class Scenario:
     load_scale: float
     chain: str
     chain_nodes: int
+    fault: str = ""                      # fault profile name; "" = none
+    fault_spec: Optional[FaultSpec] = None
 
     @property
     def cluster(self) -> str:
         return self.profile.name
+
+    @property
+    def _fault_suffix(self) -> str:
+        return f"/{self.fault}" if self.fault else ""
 
     def with_chain_nodes(self, n_nodes: int) -> "Scenario":
         """This cell with an arbitrary chain size: the registered shape
@@ -49,15 +63,28 @@ class Scenario:
             return self
         for cname, nodes in CHAIN_SHAPES.items():
             if nodes == n_nodes:
-                return SCENARIOS[f"{self.cluster}/{self.load}/{cname}"]
+                return SCENARIOS[f"{self.cluster}/{self.load}/{cname}"
+                                 f"{self._fault_suffix}"]
         return dataclasses.replace(
-            self, name=f"{self.cluster}/{self.load}/{n_nodes}n",
+            self, name=(f"{self.cluster}/{self.load}/{n_nodes}n"
+                        f"{self._fault_suffix}"),
             chain=f"{n_nodes}n", chain_nodes=n_nodes)
 
     def make_trace(self, months: Optional[int] = None, seed: int = 0
                    ) -> List[Job]:
         return synthesize_trace(self.profile, months=months, seed=seed,
                                 load_scale=self.load_scale)
+
+    def make_fault_plan(self, trace: List[Job], seed: int = 0
+                        ) -> Optional[FaultPlan]:
+        """The cell's deterministic FaultPlan over the trace horizon
+        (None for fault-free cells). Same (spec, trace, seed) -> same
+        plan, so faulted cells replay identically run-to-run."""
+        if self.fault_spec is None:
+            return None
+        horizon = trace[-1].submit_time + 3 * 24 * 3600.0
+        return self.fault_spec.make_plan(horizon, self.profile.n_nodes,
+                                         seed)
 
     def env_config(self, history: int = 144, interval: float = 600.0,
                    **kw):
@@ -72,8 +99,9 @@ class Scenario:
         """A scalar ProvisionEnv for this scenario (trace seeded ``seed``)."""
         from repro.core import ProvisionEnv
         trace = trace if trace is not None else self.make_trace(months, seed)
-        return ProvisionEnv(trace, self.env_config(history, interval),
-                            seed=seed, cache=cache)
+        cfg = self.env_config(history, interval,
+                              faults=self.make_fault_plan(trace, seed))
+        return ProvisionEnv(trace, cfg, seed=seed, cache=cache)
 
     def make_vector_env(self, batch: int, months: Optional[int] = None,
                         seed: int = 0, history: int = 144,
@@ -81,11 +109,12 @@ class Scenario:
                         trace: Optional[List[Job]] = None):
         """A B-lane VectorProvisionEnv for this scenario; pass ``cache=``
         to share one ReplayCheckpointCache across sweep cells that reuse
-        the same trace."""
+        the same trace (the cache must carry the same fault plan)."""
         from repro.core import VectorProvisionEnv
         trace = trace if trace is not None else self.make_trace(months, seed)
-        return VectorProvisionEnv(trace, self.env_config(history, interval),
-                                  batch, seed=seed, cache=cache)
+        cfg = self.env_config(history, interval,
+                              faults=self.make_fault_plan(trace, seed))
+        return VectorProvisionEnv(trace, cfg, batch, seed=seed, cache=cache)
 
 
 def _build_registry() -> Dict[str, Scenario]:
@@ -96,6 +125,10 @@ def _build_registry() -> Dict[str, Scenario]:
                 s = Scenario(f"{prof.name}/{lname}/{cname}", prof, lname,
                              scale, cname, nodes)
                 reg[s.name] = s
+                for fname, spec in FAULT_PROFILES.items():
+                    f = Scenario(f"{s.name}/{fname}", prof, lname, scale,
+                                 cname, nodes, fault=fname, fault_spec=spec)
+                    reg[f.name] = f
     return reg
 
 
@@ -113,28 +146,37 @@ def _chain_name(chain: Union[str, int]) -> str:
 
 
 def get_scenario(cluster: str, load: Optional[str] = None,
-                 chain: Union[str, int] = "single") -> Scenario:
-    """Look up a scenario by full name (``"V100/heavy/single"``) or by
-    (cluster, load, chain) components; ``chain`` accepts a shape name or
-    a registered node count."""
+                 chain: Union[str, int] = "single",
+                 fault: str = "") -> Scenario:
+    """Look up a scenario by full name (``"V100/heavy/single"`` or
+    ``"V100/heavy/single/faulty"``) or by (cluster, load, chain, fault)
+    components; ``chain`` accepts a shape name or a registered node
+    count, ``fault`` a registered fault profile name ("" = fault-free)."""
     if load is None:
         return SCENARIOS[cluster]
-    return SCENARIOS[f"{cluster}/{load}/{_chain_name(chain)}"]
+    suffix = f"/{fault}" if fault else ""
+    return SCENARIOS[f"{cluster}/{load}/{_chain_name(chain)}{suffix}"]
 
 
 def iter_scenarios(clusters: Optional[Iterable[str]] = None,
                    loads: Optional[Iterable[str]] = None,
-                   chains: Optional[Iterable[Union[str, int]]] = None
+                   chains: Optional[Iterable[Union[str, int]]] = None,
+                   faults: Optional[Iterable[str]] = None
                    ) -> Iterator[Scenario]:
     """Iterate the grid in registry order, optionally filtered by cluster
-    names, load-level names, and chain shapes (names or node counts)."""
+    names, load-level names, chain shapes (names or node counts), and
+    fault profile names (``""`` selects the fault-free cells; the default
+    ``None`` — like the other filters — selects everything)."""
     chain_names = None if chains is None else {_chain_name(c)
                                                for c in chains}
+    fault_names = None if faults is None else set(faults)
     for s in SCENARIOS.values():
         if clusters is not None and s.cluster not in clusters:
             continue
         if loads is not None and s.load not in loads:
             continue
         if chain_names is not None and s.chain not in chain_names:
+            continue
+        if fault_names is not None and s.fault not in fault_names:
             continue
         yield s

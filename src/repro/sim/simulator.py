@@ -36,6 +36,7 @@ import numpy as np
 
 from repro.analysis import cow as _cow
 from .cluster import Cluster
+from .faults import FaultPlan
 from .trace import Job
 
 # multifactor priority weights (slurm.conf-style)
@@ -49,7 +50,8 @@ _EMPTY_I = np.empty(0, np.int64)
 
 class SlurmSimulator:
     def __init__(self, n_nodes: int, mode: str = "fast",
-                 sched_interval: float = 300.0, backfill: bool = True):
+                 sched_interval: float = 300.0, backfill: bool = True,
+                 faults: Optional[FaultPlan] = None):
         assert mode in ("fast", "exact")
         self.cluster = Cluster(n_nodes)
         self.mode = mode
@@ -58,6 +60,17 @@ class SlurmSimulator:
         self.now = 0.0
         self._next_sched = 0.0
         self._sched_passes = 0
+        # fault schedule (immutable, shareable across forks); the empty
+        # plan takes no branch the fault-free engine wouldn't
+        self._faults = faults
+        self._has_faults = faults is not None and len(faults) > 0
+        self._fault_ptr = 0
+        # next fault instant, maintained as a scalar so the fault-free hot
+        # loop pays one attribute read (inf), not a method call per event
+        self._nf = float(faults.times[0]) if self._has_faults else _INF
+        self.n_node_failures = 0
+        self.n_requeues = 0
+        self.lost_node_s = 0.0
         # --- structure-of-arrays job store -------------------------------
         cap = 64
         self._cap = cap
@@ -203,8 +216,11 @@ class SlurmSimulator:
     def _next_completion(self) -> float:
         return self._next_comp
 
+    def _next_fault(self) -> float:
+        return self._nf
+
     def _next_event_time(self) -> float:
-        return min(self._next_arrival(), self._next_completion())
+        return min(self._next_arrival(), self._next_completion(), self._nf)
 
     def _queue_prio(self, idx: np.ndarray) -> np.ndarray:
         """Multifactor priority (age + size) at the current instant."""
@@ -239,6 +255,103 @@ class SlurmSimulator:
             mk = float(self._end[ids].max())
             if mk > self._makespan:
                 self._makespan = mk
+        # faults last: a job ending exactly at the fault instant completes
+        # rather than being killed, and kills see post-completion capacity
+        if self._nf <= t:
+            self._apply_faults(t)
+
+    # ---------------------------------------------------------- fault path
+    def _apply_faults(self, t: float) -> None:
+        """Apply every fault event with time <= t, in plan order.
+
+        Failure: ``nodes`` leave service; if the running allocation no
+        longer fits the shrunk capacity, jobs are killed newest-start-
+        first (ties: higher index first — deterministic) and requeued.
+        Repair: the nodes return and the next scheduling pass can place
+        work on them. Every event invalidates the no-op scheduling cache:
+        capacity — and with it both fit tests and the size-priority
+        normalizer — changed."""
+        F = self._faults
+        p = self._fault_ptr
+        cl = self.cluster
+        while p < len(F) and F.times[p] <= t:
+            m = int(F.nodes[p])
+            if int(F.kinds[p]) == 0:                    # failure
+                cl.down_nodes += m
+                self.n_node_failures += 1
+                deficit = -cl.n_free
+                rn = self._run_n
+                if deficit > 0 and rn:
+                    run = self._run_i[:rn]
+                    order = np.lexsort((-run, -self._start[run]))
+                    csum = np.cumsum(self._nn[run[order]])
+                    k = min(int(np.searchsorted(csum, deficit, "left")) + 1,
+                            rn)
+                    victims = run[order[:k]]            # fancy index: copy
+                    self._kill(victims, requeue=True, charge_lost=True)
+            else:                                       # repair
+                cl.down_nodes = max(cl.down_nodes - m, 0)
+            self._noop_free = -1
+            p += 1
+        self._fault_ptr = p
+        self._nf = float(F.times[p]) if p < len(F) else _INF
+
+    def _kill(self, ids: np.ndarray, requeue: bool,
+              charge_lost: bool) -> None:
+        """Remove running jobs ``ids`` at the current instant: release
+        their nodes, reset start/end (eagerly-copied arrays — CoW-safe),
+        and optionally requeue them Slurm-style. Requeued jobs keep their
+        original submit time, so their age priority survives the kill."""
+        rn = self._run_n
+        keep = ~np.isin(self._run_i[:rn], ids)
+        nk = int(keep.sum())
+        self._run_i[:nk] = self._run_i[:rn][keep]
+        self._run_end[:nk] = self._run_end[:rn][keep]
+        self._run_n = nk
+        self._next_comp = float(self._run_end[:nk].min()) if nk else _INF
+        self.cluster.release_n(int(self._nn[ids].sum()))
+        if charge_lost:
+            self.lost_node_s += float(((self.now - self._start[ids])
+                                       * self._nn[ids]).sum())
+        self._start[ids] = -1.0
+        self._end[ids] = -1.0
+        if requeue:
+            self._q = np.concatenate([self._q, ids])    # wholesale: CoW-safe
+            self.n_requeues += int(ids.size)
+        # boundary write-back (same ownership rule as _start_batch)
+        jobs, tracked = self._jobs, self._tracked
+        for i in ids.tolist():
+            if not self._forked or i in tracked:
+                j = jobs[i]
+                j.start_time = -1.0
+                j.end_time = -1.0
+        self._noop_free = -1               # free nodes / queue changed
+
+    def cancel(self, job_id: int) -> bool:
+        """Best-effort cancel: drop the job from the queue or pending
+        arrivals, or kill it if running (no requeue, no loss charged —
+        cancellation is intentional). Returns False when the job is not
+        live on this simulator (unknown index, or already finished)."""
+        idx = self._by_id.get(int(job_id))
+        if idx is None or idx >= self._n:
+            return False
+        pos = np.flatnonzero(self._q == idx)
+        if pos.size:
+            self._q = np.delete(self._q, pos)           # wholesale: CoW-safe
+            self._noop_free = -1           # cached head/qlen may be stale
+            return True
+        ap = self._arr_ptr
+        keep = self._arr_i[ap:] != idx
+        if not keep.all():
+            self._arr_t = self._arr_t[ap:][keep]
+            self._arr_i = self._arr_i[ap:][keep]
+            self._arr_ptr = 0
+            return True
+        if (self._run_i[:self._run_n] == idx).any():
+            self._kill(np.array([idx], np.int64), requeue=False,
+                       charge_lost=False)
+            return True
+        return False
 
     def run_until(self, t: float, _stop_idx: Optional[int] = None) -> None:
         """Advance to time t, processing events (and polls in exact mode).
@@ -265,14 +378,17 @@ class SlurmSimulator:
             if _stop_idx is not None and tn == _INF and not exact:
                 return
             # arrival-run fast-forward: absorb a whole run of arrivals up
-            # to the next completion (or t) in one event when none of them
-            # could change the schedule — trivially true with zero free
-            # nodes (every per-arrival pass would early-out), and provable
-            # via the cached blocking state otherwise (each pending
-            # arrival checked at its own submit instant)
-            if not exact and self._next_comp > tn:
+            # to the next completion/fault (or t) in one event when none
+            # of them could change the schedule — trivially true with
+            # zero free nodes (every per-arrival pass would early-out),
+            # and provable via the cached blocking state otherwise (each
+            # pending arrival checked at its own submit instant). The
+            # jump is bounded by the next fault event so capacity changes
+            # are never skipped (with no faults the bound is +inf — the
+            # fault-free math is untouched).
+            if (not exact and self._next_comp > tn and self._nf > tn):
                 free = self.cluster.n_free
-                tj = min(self._next_comp, t)
+                tj = min(self._next_comp, self._nf, t)
                 if free == 0:
                     tn = tj
                 elif self._noop_free == free:
@@ -645,6 +761,15 @@ class SlurmSimulator:
         s._next_comp = self._next_comp
         s._fin = list(self._fin)
         s._makespan = self._makespan
+        # fault schedule: the plan is immutable and shared; only the
+        # cursor and counters are per-simulator state
+        s._faults = self._faults
+        s._has_faults = self._has_faults
+        s._fault_ptr = self._fault_ptr
+        s._nf = self._nf
+        s.n_node_failures = self.n_node_failures
+        s.n_requeues = self.n_requeues
+        s.lost_node_s = self.lost_node_s
         s._forked = True
         s._tracked = set()
         # the no-op scheduling cache references queue layout; start the

@@ -62,10 +62,18 @@ class ChainedTrainer:
         return True
 
     # ------------------------------------------------------------ sub-job
-    def run_subjob(self, n_steps: int) -> Dict:
-        """Run (up to) n_steps of one sub-job; returns exit info."""
-        guard = PreemptionGuard(self.chain.wall_limit_s, self.chain.grace_s,
-                                install_signals=False)
+    def run_subjob(self, n_steps: int,
+                   guard: Optional[PreemptionGuard] = None) -> Dict:
+        """Run (up to) n_steps of one sub-job; returns exit info.
+
+        ``guard`` lets a control plane (repro.core.control.ChainDriver)
+        inject its own PreemptionGuard so it can preempt the data plane
+        programmatically via ``guard.trigger()``; by default each sub-job
+        gets a fresh guard scoped to the chain's wall limit."""
+        if guard is None:
+            guard = PreemptionGuard(self.chain.wall_limit_s,
+                                    self.chain.grace_s,
+                                    install_signals=False)
         self.guard = guard
         losses = []
         reason = "budget"

@@ -9,15 +9,17 @@ checkpoint.restore_checkpoint's reshape path).
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import signal
 import threading
 import time
-from typing import Callable, Dict, List, Optional
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional
 
 
 class PreemptionGuard:
-    """Watches for SIGTERM/SIGINT (batch-scheduler preemption) and a
+    """Watches for SIGTERM/SIGUSR1 (batch-scheduler preemption) and a
     wall-clock budget; the train loop polls ``should_stop`` each step."""
 
     def __init__(self, wall_limit_s: Optional[float] = None,
@@ -57,30 +59,38 @@ class StragglerMonitor:
     """Per-step wall-time tracker: flags steps slower than
     ``threshold x`` the trailing median — on real pods this drives the
     launcher's decision to health-check / evict a host and restart on a
-    shrunken mesh (elastic path)."""
+    shrunken mesh (elastic path).
+
+    The trailing window is kept in two views: ``_times`` in insertion
+    order (for eviction) and ``_sorted`` maintained incrementally with
+    ``bisect`` (for the median), so ``record`` is O(window) worst case
+    instead of re-sorting the whole window every step."""
     window: int = 50
     threshold: float = 2.5
-    _times: List[float] = dataclasses.field(default_factory=list)
+    _times: Deque[float] = dataclasses.field(default_factory=deque)
+    _sorted: List[float] = dataclasses.field(default_factory=list)
     flagged: int = 0
 
     def record(self, step_time_s: float) -> bool:
-        ts = self._times
+        ts, srt = self._times, self._sorted
         is_straggler = False
         if len(ts) >= 10:
-            med = sorted(ts)[len(ts) // 2]
+            med = srt[len(srt) // 2]
             is_straggler = step_time_s > self.threshold * med
             if is_straggler:
                 self.flagged += 1
         ts.append(step_time_s)
+        bisect.insort(srt, step_time_s)
         if len(ts) > self.window:
-            ts.pop(0)
+            old = ts.popleft()
+            del srt[bisect.bisect_left(srt, old)]
         return is_straggler
 
     @property
     def median(self) -> float:
-        if not self._times:
+        if not self._sorted:
             return 0.0
-        return sorted(self._times)[len(self._times) // 2]
+        return self._sorted[len(self._sorted) // 2]
 
 
 @dataclasses.dataclass

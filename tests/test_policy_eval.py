@@ -1,10 +1,12 @@
 """Batched Policy protocol + vectorized evaluation (ISSUE 5).
 
 The contract: ``evaluate_batch`` with B lanes produces an EvalResult
-identical to B scalar ``evaluate`` episodes at the same seeds and start
+identical to B single-lane (B=1) evaluations at the same seeds and start
 instants, for every method in ALL_METHODS — lane ``i`` of the vector env
 is bit-identical to a scalar env seeded ``seed + i``, and every policy
-acts through one batched code path.
+acts through one batched code path. (The scalar ``evaluate`` shim and
+the pre-protocol act-only adapter were retired after their one-release
+window; B=1 ``evaluate_batch`` is the scalar path now.)
 """
 import dataclasses
 
@@ -14,7 +16,7 @@ import pytest
 from repro.core import (DQNConfig, DQNLearner, EnvConfig, FoundationConfig,
                         MiragePolicy, PGConfig, PGLearner, ProvisionEnv,
                         ReplayCheckpointCache, TreePolicy,
-                        VectorProvisionEnv, evaluate, evaluate_batch)
+                        VectorProvisionEnv, evaluate_batch)
 from repro.core.agent import ALL_METHODS
 from repro.core.baselines import AvgWaitPolicy
 from repro.core.trees import GradientBoosting, RandomForest
@@ -77,9 +79,9 @@ def test_evaluate_batch_matches_scalar(world, stateless_policies, method):
                           t_starts=t0s)
     waits, ints, ovls = [], [], []
     for i in range(B):
-        env = ProvisionEnv(jobs, cfg, seed=SEED + i, cache=cache)
-        sres = evaluate(env, make_policy(method, stateless_policies),
-                        episodes=1, t_starts=[t0s[i]])
+        venv1 = VectorProvisionEnv(jobs, cfg, 1, seed=SEED + i, cache=cache)
+        sres = evaluate_batch(venv1, make_policy(method, stateless_policies),
+                              t_starts=[t0s[i]])
         waits += sres.waits_h
         ints += sres.interruptions_h
         ovls += sres.overlaps_h
@@ -101,15 +103,15 @@ def test_evaluate_batch_tail_chunk(world, stateless_policies):
     assert res.summary()["n_episodes"] == 3
 
 
-def test_evaluate_shim_observe_cadence(world):
-    """The B=1 shim must feed the avg policy one episode at a time
-    (legacy observe_wait cadence): after k episodes the window holds the
-    warm start plus k observed waits."""
+def test_evaluate_b1_observe_cadence(world):
+    """A B=1 env must feed the avg policy one episode at a time (each
+    episode is its own chunk, the legacy observe_wait cadence): after k
+    episodes the window holds the warm start plus k observed waits."""
     jobs, cfg, cache = world
-    env = ProvisionEnv(jobs, cfg, seed=SEED, cache=cache)
+    venv = VectorProvisionEnv(jobs, cfg, 1, seed=SEED, cache=cache)
     pol = MiragePolicy("avg")
     pol.avg.waits = WARM_WAITS
-    res = evaluate(env, pol, episodes=2, seed=7)
+    res = evaluate_batch(venv, pol, episodes=2, seed=7)
     assert len(pol.avg.waits) == len(WARM_WAITS) + 2
     assert pol.avg.waits[-2:] == [w * HOUR for w in res.waits_h]
 
@@ -146,37 +148,22 @@ def test_scalar_env_cache_bit_identical(world):
 
 
 def test_evaluate_cacheless_matches_cached(world, stateless_policies):
-    """The evaluate shim's two branches (env.cache set vs the single-use
-    checkpoint-free stand-in) must produce identical results — one lane
-    env serves the whole call either way."""
+    """A checkpoint-free stand-in cache (interval=inf: per-episode
+    trace-head replays, the legacy scalar cost model) must produce
+    results identical to a warm checkpointed cache — checkpoint forks
+    are bit-identical to fresh replays."""
     jobs, cfg, cache = world
     pol = stateless_policies["reactive"]
-    r_cold = evaluate(ProvisionEnv(jobs, cfg, seed=SEED), pol,
-                      episodes=2, seed=7)
-    r_warm = evaluate(ProvisionEnv(jobs, cfg, seed=SEED, cache=cache), pol,
-                      episodes=2, seed=7)
+    cold = ReplayCheckpointCache(jobs, cfg.n_nodes, interval=float("inf"))
+    r_cold = evaluate_batch(
+        VectorProvisionEnv(jobs, cfg, 1, seed=SEED, cache=cold), pol,
+        episodes=2, seed=7)
+    r_warm = evaluate_batch(
+        VectorProvisionEnv(jobs, cfg, 1, seed=SEED, cache=cache), pol,
+        episodes=2, seed=7)
     assert r_cold.waits_h == r_warm.waits_h
     assert r_cold.interruptions_h == r_warm.interruptions_h
     assert r_cold.overlaps_h == r_warm.overlaps_h
-
-
-def test_evaluate_shim_accepts_act_only_policy(world):
-    """One-release contract: a pre-protocol duck-typed policy exposing
-    only act(obs) still works through the evaluate shim."""
-    jobs, cfg, cache = world
-
-    class OldReactive:
-        name = "old-reactive"
-
-        def act(self, obs):
-            return 1 if obs["pred_remaining"] <= 0 else 0
-
-    env = ProvisionEnv(jobs, cfg, seed=SEED, cache=cache)
-    old = evaluate(env, OldReactive(), episodes=2, seed=7)
-    new = evaluate(ProvisionEnv(jobs, cfg, seed=SEED, cache=cache),
-                   MiragePolicy("reactive"), episodes=2, seed=7)
-    assert old.method == "old-reactive"
-    assert old.waits_h == new.waits_h
 
 
 def test_offline_samples_reuse_env_cache(world):
@@ -215,15 +202,18 @@ def test_build_policy_pg_passes_seed(world, monkeypatch):
 
 
 def test_scenario_registry():
-    from repro.sim import (CHAIN_SHAPES, LOAD_LEVELS, SCENARIOS,
-                           get_scenario, iter_scenarios)
-    assert len(SCENARIOS) == 3 * len(LOAD_LEVELS) * len(CHAIN_SHAPES)
+    from repro.sim import (CHAIN_SHAPES, FAULT_PROFILES, LOAD_LEVELS,
+                           SCENARIOS, get_scenario, iter_scenarios)
+    assert len(SCENARIOS) == (3 * len(LOAD_LEVELS) * len(CHAIN_SHAPES)
+                              * (1 + len(FAULT_PROFILES)))
     s = get_scenario("V100", "heavy", "single")
     assert s is get_scenario("V100/heavy/single")
     assert s is get_scenario("V100", "heavy", 1)      # node-count lookup
     assert s.load_scale == LOAD_LEVELS["heavy"]
     assert s.chain_nodes == 1
-    multi = list(iter_scenarios(clusters=["RTX"], chains=["multi"]))
+    assert s.fault == "" and s.fault_spec is None
+    multi = list(iter_scenarios(clusters=["RTX"], chains=["multi"],
+                                faults=[""]))
     assert [m.name for m in multi] == ["RTX/light/multi", "RTX/medium/multi",
                                        "RTX/heavy/multi"]
     cfg = s.env_config(history=12, interval=1800.0)
@@ -234,3 +224,13 @@ def test_scenario_registry():
     ad_hoc = s.with_chain_nodes(2)
     assert ad_hoc.name == "V100/heavy/2n" and ad_hoc.chain_nodes == 2
     assert ad_hoc.env_config().chain_nodes == 2
+    # faulted cells: every fault-free cell has a named faulted variant
+    f = get_scenario("V100", "heavy", "single", fault="faulty")
+    assert f is get_scenario("V100/heavy/single/faulty")
+    assert f.fault == "faulty" and f.fault_spec is FAULT_PROFILES["faulty"]
+    assert f.with_chain_nodes(8) is get_scenario("V100/heavy/multi/faulty")
+    faulted = list(iter_scenarios(clusters=["RTX"], chains=["multi"],
+                                  faults=["faulty"]))
+    assert [m.name for m in faulted] == [
+        "RTX/light/multi/faulty", "RTX/medium/multi/faulty",
+        "RTX/heavy/multi/faulty"]

@@ -61,6 +61,19 @@ def test_engine_queue_overflow_refills(small_model):
     assert all(len(r.out) == 3 for r in done)
 
 
+def test_engine_run_returns_inflight_requests(small_model):
+    """Regression: run() used to snapshot only the queue, silently
+    dropping requests already admitted to slots by an earlier step()."""
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, batch=2, s_max=32)
+    eng.add_request(Request(rid=7, prompt=[5, 17, 42], max_new=4))
+    eng.step()                      # admits rid=7 into a slot; queue empties
+    assert eng.queue == [] and any(r is not None for r in eng.slot_req)
+    done = eng.run()
+    assert [r.rid for r in done] == [7]
+    assert len(done[0].out) == 4
+
+
 def test_engine_rejects_encoder(small_model):
     cfg = registry.get_config("hubert-xlarge", smoke=True)
     with pytest.raises(AssertionError):

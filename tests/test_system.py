@@ -6,7 +6,8 @@ import numpy as np
 import pytest
 
 from repro.core import (DQNConfig, DQNLearner, EnvConfig, FoundationConfig,
-                        MiragePolicy, ProvisionEnv, build_policy, evaluate,
+                        MiragePolicy, ProvisionEnv, ReplayCheckpointCache,
+                        VectorProvisionEnv, build_policy, evaluate_batch,
                         pretrain_foundation, train_online_dqn)
 from repro.core.provisioner import collect_offline_samples
 from repro.sim import split_trace, synthesize_trace
@@ -15,12 +16,21 @@ from repro.sim.trace import V100
 HOUR = 3600.0
 
 
+def _evaluate(env, policy, episodes, seed):
+    """Scalar-semantics evaluation: a B=1 lane through evaluate_batch
+    (each episode its own chunk, the retired scalar loop's cadence)."""
+    venv = VectorProvisionEnv(env.trace, env.cfg, 1, seed=env.seed,
+                              cache=env.cache)
+    return evaluate_batch(venv, policy, episodes=episodes, seed=seed)
+
+
 @pytest.fixture(scope="module")
 def setup():
     jobs = synthesize_trace(V100, months=2, seed=9, load_scale=1.0)
     train, val = split_trace(jobs, 0.8)
-    env_train = ProvisionEnv(jobs, EnvConfig(n_nodes=V100.n_nodes, history=12,
-                                             interval=1800.0), seed=0)
+    cfg = EnvConfig(n_nodes=V100.n_nodes, history=12, interval=1800.0)
+    env_train = ProvisionEnv(jobs, cfg, seed=0,
+                             cache=ReplayCheckpointCache(jobs, cfg.n_nodes))
     samples = collect_offline_samples(env_train, n_episodes=3, n_points=4,
                                       seed=1)
     return env_train, samples
@@ -30,20 +40,20 @@ def test_heuristics_ordering(setup):
     """avg must not be (much) worse than reactive under heavy load — the
     paper's core observation that proactivity pays when waits are long."""
     env, samples = setup
-    r_reactive = evaluate(env, build_policy("reactive", env), episodes=6,
-                          seed=7)
+    r_reactive = _evaluate(env, build_policy("reactive", env), episodes=6,
+                           seed=7)
     pol_avg = build_policy("avg", env)
     pol_avg.avg.waits = [s["wait_s"] for s in samples]   # warm start T_avg
-    r_avg = evaluate(env, pol_avg, episodes=6, seed=7)
+    r_avg = _evaluate(env, pol_avg, episodes=6, seed=7)
     assert r_avg.mean_interruption_h <= r_reactive.mean_interruption_h * 1.05
 
 
 def test_tree_policy_beats_reactive(setup):
     env, samples = setup
-    r_reactive = evaluate(env, build_policy("reactive", env), episodes=6,
-                          seed=11)
+    r_reactive = _evaluate(env, build_policy("reactive", env), episodes=6,
+                           seed=11)
     pol = build_policy("random_forest", env, offline_samples=samples, seed=0)
-    r_tree = evaluate(env, pol, episodes=6, seed=11)
+    r_tree = _evaluate(env, pol, episodes=6, seed=11)
     # learned wait estimate should reduce interruption on the heavy trace
     assert r_tree.mean_interruption_h <= r_reactive.mean_interruption_h * 1.05
 
@@ -57,8 +67,8 @@ def test_rl_end_to_end_improves_over_never_submitting(setup):
     learner = DQNLearner(fc, DQNConfig(batch_size=8), seed=0, params=params)
     rets = train_online_dqn(env, learner, episodes=4, seed=0)
     assert all(np.isfinite(rets))
-    res = evaluate(env, MiragePolicy("transformer+dqn", learner=learner),
-                   episodes=4, seed=13)
+    res = _evaluate(env, MiragePolicy("transformer+dqn", learner=learner),
+                    episodes=4, seed=13)
     s = res.summary()
     assert np.isfinite(s["mean_interruption_h"])
     assert s["n_episodes"] == 4

@@ -168,6 +168,29 @@ def test_straggler_monitor():
     assert m.record(1.1) is False
 
 
+def test_straggler_monitor_incremental_sorted_window():
+    """The bisect-maintained sorted view must match a from-scratch sort of
+    the trailing window at every step (same flags, same median), including
+    across evictions once the window saturates."""
+    rng = np.random.default_rng(4)
+    m = StragglerMonitor(window=16, threshold=2.5)
+    ref_window = []
+    ref_flagged = 0
+    for w in rng.uniform(0.5, 4.0, 100):
+        w = float(w)
+        ref_flag = False
+        if len(ref_window) >= 10:
+            med = sorted(ref_window)[len(ref_window) // 2]
+            ref_flag = w > 2.5 * med
+            ref_flagged += ref_flag
+        ref_window = (ref_window + [w])[-16:]
+        assert m.record(w) is ref_flag
+        assert list(m._times) == ref_window
+        assert m._sorted == sorted(ref_window)
+        assert m.median == sorted(ref_window)[len(ref_window) // 2]
+    assert m.flagged == ref_flagged
+
+
 def test_preemption_guard_wall_limit():
     g = PreemptionGuard(wall_limit_s=0.0, grace_s=0.0, install_signals=False)
     assert g.should_stop()
