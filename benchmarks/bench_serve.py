@@ -1,0 +1,75 @@
+"""Multi-tenant provisioning service throughput: decisions/sec, p99
+decision latency and degraded-mode (breaker-open) throughput with
+hundreds of journal-less tenant chains multiplexed over one shared
+replay-checkpoint cache (the ``serve_decisions`` tracked artifact,
+gated by ``scripts/check_bench.py serve``).
+"""
+import time
+
+from repro.core import (CircuitBreaker, EnvConfig, FallbackPolicy,
+                        ReactivePolicy, ReplayCheckpointCache, RetryPolicy)
+from repro.serve import ProvisionService, ServiceConfig
+from repro.sim import get_fault_spec, synthesize_trace
+from repro.sim.trace import V100
+
+from .common import QUICK, emit
+
+HOUR = 3600.0
+DAY = 24 * HOUR
+TENANTS = 128 if QUICK else 1024     # the gate requires >= 100 tenants
+LINKS = 1
+SUB_LIMIT = 6 * HOUR
+
+
+def _world():
+    jobs = synthesize_trace(V100, months=1, seed=5, load_scale=1.0)
+    plan = get_fault_spec("faulty").make_plan(
+        jobs[-1].submit_time + 3 * DAY, V100.n_nodes, seed=3)
+    cfg = EnvConfig(n_nodes=V100.n_nodes, history=12, interval=1800.0,
+                    sub_limit=SUB_LIMIT, faults=plan)
+    cache = ReplayCheckpointCache(jobs, cfg.n_nodes, faults=plan)
+    return jobs, cfg, cache
+
+
+def _run_service(jobs, cfg, cache, breaker=None):
+    svc = ServiceConfig(tenants=TENANTS, links=LINKS, max_batch=64)
+    s = ProvisionService(
+        jobs, cfg, FallbackPolicy(ReactivePolicy()), svc=svc, seed=17,
+        cache=cache, breaker=breaker,
+        retry_factory=lambda i: RetryPolicy(seed=100 + i,
+                                            sleep=lambda _s: None))
+    t0 = time.perf_counter()
+    res = s.run()
+    return res, time.perf_counter() - t0
+
+
+def run():
+    jobs, cfg, cache = _world()
+    res, dt = _run_service(jobs, cfg, cache)
+    assert res.reason == "completed" and res.n_shed == 0
+    dps = res.n_decisions / dt
+    p99_ms = res.p99_latency_s * 1e3
+
+    # degraded mode: breaker forced open, every decision answered via
+    # the reactive path without consulting the policy
+    br = CircuitBreaker(cooldown_s=float("inf"))
+    br.trip()
+    dres, ddt = _run_service(jobs, cfg, cache, breaker=br)
+    assert dres.n_degraded == dres.n_decisions
+    ddps = dres.n_decisions / ddt
+
+    emit("serve_decisions", dt / max(res.n_decisions, 1) * 1e6,
+         f"{dps:.0f}dec/s_p99={p99_ms:.2f}ms", {
+             "tenants": TENANTS,
+             "links": LINKS,
+             "n_decisions": res.n_decisions,
+             "decisions_per_s": dps,
+             "p99_latency_ms": p99_ms,
+             "degraded_decisions_per_s": ddps,
+             "wall_s": dt,
+             "degraded_wall_s": ddt,
+         })
+
+
+if __name__ == "__main__":
+    run()

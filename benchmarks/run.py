@@ -16,12 +16,14 @@ import traceback
 
 def suites():
     from . import (bench_eval, bench_interruption, bench_kernels,
-                   bench_moe_gating, bench_roofline, bench_simulator)
+                   bench_moe_gating, bench_roofline, bench_serve,
+                   bench_simulator)
     return [
         ("simulator (Table 1, 5.2)", bench_simulator.run),
         ("rollout throughput (5.1)", bench_simulator.bench_rollout_throughput),
         ("rollout faulty (robustness)", bench_simulator.bench_rollout_faulty),
         ("eval throughput (6, Figs. 8-9 grid)", bench_eval.run),
+        ("serve decisions (multi-tenant service)", bench_serve.run),
         ("kernels", bench_kernels.run),
         ("moe gating (4.7)", bench_moe_gating.run),
         ("roofline (g)", bench_roofline.run),

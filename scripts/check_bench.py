@@ -27,9 +27,10 @@ ROOT = pathlib.Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(ROOT / "src"))
 sys.path.insert(0, str(ROOT))
 
-# artifact stem -> {metric: direction}; all tracked metrics are
-# higher-is-better ("up"). The suite filter names the benchmarks/run.py
-# suite that produces the artifact.
+# artifact stem -> {metric: direction}; "up" metrics gate when the fresh
+# value drops below tolerance x baseline, "down" metrics (latencies)
+# when it rises above baseline / tolerance. The suite filter names the
+# benchmarks/run.py suite that produces the artifact.
 TRACKED = {
     "rollout_throughput": {
         "suite": "rollout throughput",
@@ -46,6 +47,12 @@ TRACKED = {
     "eval_throughput": {
         "suite": "eval throughput",
         "metrics": {"batch_episodes_per_s": "up", "speedup_vs_scalar": "up"},
+    },
+    "serve_decisions": {
+        "suite": "serve decisions",
+        "metrics": {"decisions_per_s": "up",
+                    "degraded_decisions_per_s": "up",
+                    "p99_latency_ms": "down"},
     },
 }
 
@@ -107,19 +114,23 @@ def main() -> int:
                 print(f"check_bench: updated baseline {base_path}")
                 continue
             base = json.loads(base_path.read_text())
-            for metric in spec["metrics"]:
+            for metric, direction in spec["metrics"].items():
                 if metric not in base:
                     print(f"check_bench: {stem}.{metric} not in baseline "
                           "(skipping)")
                     continue
                 b, f = float(base[metric]), float(fresh.get(metric, 0.0))
-                ok = f >= args.tolerance * b
+                if direction == "down":
+                    ok = f <= b / args.tolerance
+                    bound = f"{f:.3f} > {b:.3f} / {args.tolerance}"
+                else:
+                    ok = f >= args.tolerance * b
+                    bound = f"{f:.3f} < {args.tolerance} * {b:.3f}"
                 print(f"check_bench: {stem}.{metric}: fresh={f:.3f} "
-                      f"baseline={b:.3f} ({'OK' if ok else 'REGRESSION'})")
+                      f"baseline={b:.3f} [{direction}] "
+                      f"({'OK' if ok else 'REGRESSION'})")
                 if not ok:
-                    failures.append(
-                        f"{stem}.{metric}: {f:.3f} < "
-                        f"{args.tolerance} * {b:.3f}")
+                    failures.append(f"{stem}.{metric}: {bound}")
         if failures:
             print("check_bench: FAILED\n  " + "\n  ".join(failures))
             return 1

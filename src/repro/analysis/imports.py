@@ -22,6 +22,7 @@ from .base import HARD_DEPS, Finding, Pass, stdlib_roots
 LAZY_INITS = (
     "repro/train/__init__.py",
     "repro/analysis/__init__.py",
+    "repro/serve/__init__.py",
 )
 
 

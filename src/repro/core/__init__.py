@@ -5,12 +5,15 @@ from .agent import (ALL_METHODS, DEFAULT_METHOD, EvalResult,  # noqa: F401
                     train_online_pg)
 from .baselines import (AvgWaitPolicy, ReactivePolicy,  # noqa: F401
                         TreePolicy)
-from .control import (ChainDriver, ChainResult, ControlPlane,  # noqa: F401
-                      DecisionJournal, RetryPolicy, TransientControlError)
+from .control import (ChainDriver, ChainLane, ChainResult,  # noqa: F401
+                      CircuitBreaker, ControlPlane, DecisionJournal,
+                      JournalCorruptionError, RetryExhaustedError,
+                      RetryPolicy, TransientControlError)
 from .dqn import DQNConfig, DQNLearner  # noqa: F401
 from .foundation import FoundationConfig, init_foundation, q_values  # noqa: F401
 from .pg import PGConfig, PGLearner  # noqa: F401
-from .policy import FallbackPolicy, Policy, batch_obs  # noqa: F401
+from .policy import (FallbackPolicy, Policy, batch_obs,  # noqa: F401
+                     stack_obs)
 from .provisioner import (EnvConfig, ProvisionEnv,  # noqa: F401
                           ReplayCheckpointCache, VectorProvisionEnv,
                           collect_offline_samples)

@@ -36,6 +36,14 @@ def batch_obs(obs: Dict) -> Dict:
     return {k: np.asarray(v)[None] for k, v in obs.items()}
 
 
+def stack_obs(obs_list: List[Dict]) -> Dict:
+    """Stack N scalar observation dicts into one (N, ...) batched dict —
+    the dynamic-batching boundary of the multi-tenant serving path."""
+    keys = obs_list[0].keys()
+    return {k: np.stack([np.asarray(o[k]) for o in obs_list])
+            for k in keys}
+
+
 class Policy:
     """Base class of the batched policy protocol."""
 

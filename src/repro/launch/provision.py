@@ -14,6 +14,9 @@ through every simulator, and ``--chain-links N --journal PATH`` runs the
 trained policy through the self-healing ChainDriver — retried submits,
 reactive fallback on policy failure, and a crash-safe decision journal
 (rerunning with the same journal resumes instead of restarting).
+``--service N`` instead serves N tenant chains through the always-on
+``ProvisionService`` (dynamic batching, circuit-breaker degradation,
+load shedding; ``--journal DIR`` makes restarts crash-consistent).
 """
 from __future__ import annotations
 
@@ -42,7 +45,13 @@ def main():
     ap.add_argument("--chain-links", type=int, default=0,
                     help="also drive an N-link chain through ChainDriver")
     ap.add_argument("--journal", default=None,
-                    help="decision-journal path for the chain driver")
+                    help="decision-journal path for the chain driver; with "
+                         "--service, the per-tenant journal directory")
+    ap.add_argument("--service", type=int, default=0, metavar="N",
+                    help="run the trained policy as an N-tenant "
+                         "ProvisionService (overload protection + "
+                         "crash-consistent recovery); uses --chain-links "
+                         "links per tenant (default 2)")
     args = ap.parse_args()
 
     from repro.core import (ChainDriver, DecisionJournal, EnvConfig,
@@ -96,7 +105,28 @@ def main():
     print(f"[provision] reactive: {json.dumps(out['reactive'])}")
     print(f"[provision] interruption reduction vs reactive: {red:.0f}%")
 
-    if args.chain_links > 0:
+    if args.service > 0:
+        from repro.serve import ProvisionService, ServiceConfig
+        svc = ServiceConfig(tenants=args.service,
+                            links=args.chain_links or 2)
+        service = ProvisionService(jobs, ecfg, policy, svc=svc,
+                                   seed=args.seed, journal_dir=args.journal,
+                                   cache=cache)
+        sres = service.run()
+        h = service.health()
+        print(f"[provision] service ({svc.tenants} tenants x {svc.links} "
+              f"links): {sres.reason}; decisions {sres.n_decisions} "
+              f"({sres.n_replayed} replayed, {sres.n_degraded} degraded, "
+              f"{sres.n_shed} shed) in {sres.n_rounds} rounds / "
+              f"{sres.n_batches} batches; p99 latency "
+              f"{sres.p99_latency_s * 1e3:.2f}ms; breaker "
+              f"{h.breaker_state} ({sres.breaker_trips} trips)")
+        for i, t in enumerate(sres.tenants):
+            print(f"[provision]   tenant {i}: {t.reason}, interruption "
+                  f"{t.interruption_h:.2f}h, overlap {t.overlap_h:.2f}h, "
+                  f"{t.n_decisions} decisions ({t.n_fallbacks} fallbacks), "
+                  f"ctrl errors {t.n_ctrl_errors}")
+    elif args.chain_links > 0:
         journal = DecisionJournal(args.journal) if args.journal else None
         driver = ChainDriver(jobs, ecfg, policy, links=args.chain_links,
                              seed=args.seed, journal=journal, cache=cache)

@@ -1,1 +1,29 @@
-from .engine import Request, ServeEngine  # noqa: F401
+"""Serving layer: the batched decode engine (jax-heavy) and the
+multi-tenant provisioning service (numpy-only control plane).
+
+Exports resolve lazily (PEP 562) so importing the provisioning service
+never pays for — or breaks on — the model/decode path, per the
+optional-dependency policy (ROADMAP.md, enforced by import-discipline).
+"""
+_EXPORTS = {
+    "Request": "engine",
+    "ServeEngine": "engine",
+    "ProvisionService": "provision_service",
+    "ServiceConfig": "provision_service",
+    "ServiceHealth": "provision_service",
+    "ServiceResult": "provision_service",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        import importlib
+        mod = importlib.import_module(f".{_EXPORTS[name]}", __name__)
+        return getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

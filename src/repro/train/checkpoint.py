@@ -23,7 +23,10 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import os
 import pathlib
+import re
+import shutil
 import threading
 import time
 import zlib
@@ -73,13 +76,58 @@ def _tree_paths(tree) -> List[Tuple[str, Any]]:
     return out
 
 
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _step_of(p: pathlib.Path) -> Optional[int]:
+    m = _STEP_RE.match(p.name)
+    return int(m.group(1)) if m else None
+
+
+def _fsync_path(path: pathlib.Path) -> None:
+    fd = os.open(str(path), os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _write_durable(path: pathlib.Path, data: bytes) -> None:
+    with open(path, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+
+
+def _is_valid(d: pathlib.Path) -> bool:
+    """A publishable checkpoint directory: parsable manifest naming the
+    step, and the data shard present. (Digest verification happens at
+    restore; this guards against torn publishes, not bit rot.)"""
+    try:
+        manifest = json.loads((d / "manifest.json").read_text())
+    except (OSError, ValueError):
+        return False
+    return (isinstance(manifest.get("step"), int)
+            and (d / "data.msgpack.zst").is_file())
+
+
 def save_checkpoint(directory: str, step: int, state: Dict,
                     keep_last: int = 3) -> pathlib.Path:
-    """Synchronous save. state: arbitrary pytree of arrays (+ scalars)."""
+    """Synchronous save. state: arbitrary pytree of arrays (+ scalars).
+
+    Crash-safe publish: both files are fsynced inside the ``.tmp``
+    staging directory, the directory itself is fsynced, and only then is
+    it renamed into place (with the parent directory fsynced to make the
+    rename durable). A pre-existing checkpoint for the same step is
+    moved aside — never deleted — until its replacement is durable, so a
+    crash at any byte leaves either the old or the new checkpoint whole.
+    """
     base = pathlib.Path(directory)
     tmp = base / f"step_{step:09d}.tmp"
     final = base / f"step_{step:09d}"
-    tmp.mkdir(parents=True, exist_ok=True)
+    if tmp.exists():                        # stale staging from a crash
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
     leaves = _tree_paths(state)
     manifest = {"step": step, "leaves": [], "time": time.time(),
                 "treedef": None, "codec": DEFAULT_CODEC}
@@ -93,30 +141,53 @@ def save_checkpoint(directory: str, step: int, state: Dict,
         })
         payload[key] = buf
     raw = msgpack.packb(payload, use_bin_type=True)
-    (tmp / "data.msgpack.zst").write_bytes(_compress(raw, DEFAULT_CODEC))
-    (tmp / "manifest.json").write_text(json.dumps(manifest))
-    if final.exists():
-        import shutil
-        shutil.rmtree(final)
+    _write_durable(tmp / "data.msgpack.zst", _compress(raw, DEFAULT_CODEC))
+    _write_durable(tmp / "manifest.json", json.dumps(manifest).encode())
+    _fsync_path(tmp)
+    old = base / f"step_{step:09d}.old"
+    if old.exists():
+        shutil.rmtree(old)
+    moved_aside = final.exists()
+    if moved_aside:
+        final.rename(old)                   # keep until replacement lands
     tmp.rename(final)                       # atomic publish
+    _fsync_path(base)                       # make both renames durable
+    if moved_aside:
+        shutil.rmtree(old)
     _gc(base, keep_last)
     return final
 
 
 def _gc(base: pathlib.Path, keep_last: int) -> None:
-    steps = sorted(p for p in base.glob("step_*") if p.is_dir()
-                   and not p.name.endswith(".tmp"))
-    for p in steps[:-keep_last]:
-        import shutil
-        shutil.rmtree(p, ignore_errors=True)
+    """Retire old checkpoints, counting only *valid* ones against
+    ``keep_last`` — torn directories (crashed publishes, ``.tmp``/``.old``
+    leftovers) are swept but never crowd a good checkpoint out of the
+    keep window, so the only valid checkpoint is never deleted."""
+    valid: List[pathlib.Path] = []
+    for p in base.glob("step_*"):
+        if not p.is_dir():
+            continue
+        if _step_of(p) is None:             # .tmp / .old crash leftovers
+            shutil.rmtree(p, ignore_errors=True)
+        elif _is_valid(p):
+            valid.append(p)
+        else:                               # torn publish: unrestorable
+            shutil.rmtree(p, ignore_errors=True)
+    valid.sort(key=_step_of)
+    if keep_last > 0:
+        for p in valid[:-keep_last]:
+            shutil.rmtree(p, ignore_errors=True)
 
 
 def latest_step(directory: str) -> Optional[int]:
+    """Newest step with a *valid* (restorable) checkpoint directory —
+    a torn newest directory falls back to the previous good one."""
     base = pathlib.Path(directory)
     if not base.exists():
         return None
-    steps = sorted(int(p.name.split("_")[1]) for p in base.glob("step_*")
-                   if p.is_dir() and not p.name.endswith(".tmp"))
+    steps = sorted(s for p in base.glob("step_*")
+                   if p.is_dir() and (s := _step_of(p)) is not None
+                   and _is_valid(p))
     return steps[-1] if steps else None
 
 

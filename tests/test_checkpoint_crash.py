@@ -1,0 +1,105 @@
+"""Crash-consistency of the checkpoint store (ISSUE 8 satellites):
+durable publish, valid-only latest/restore fallback, gc that never
+deletes the only good checkpoint, and async-writer error surfacing.
+"""
+import json
+
+import jax.numpy as jnp
+import pytest
+
+from repro.train import (AsyncCheckpointer, latest_step, restore_checkpoint,
+                         save_checkpoint)
+
+STATE = {"w": jnp.arange(6.0), "n": {"b": jnp.ones((2,), jnp.int32)}}
+
+
+def _torn(base, step, kind):
+    """Fabricate a crashed publish: a step directory that is present but
+    not restorable."""
+    d = base / f"step_{step:09d}"
+    d.mkdir()
+    if kind == "no_manifest":
+        (d / "data.msgpack.zst").write_bytes(b"\x00\x01")
+    elif kind == "bad_json":
+        (d / "manifest.json").write_text("{not json")
+        (d / "data.msgpack.zst").write_bytes(b"\x00\x01")
+    elif kind == "no_data":
+        (d / "manifest.json").write_text(json.dumps({"step": step,
+                                                     "leaves": []}))
+    return d
+
+
+# ---------------------------------------------------------- valid-only
+def test_latest_step_skips_torn_newest(tmp_path):
+    save_checkpoint(str(tmp_path), 5, STATE)
+    for step, kind in ((6, "no_manifest"), (7, "bad_json"), (8, "no_data")):
+        _torn(tmp_path, step, kind)
+    assert latest_step(str(tmp_path)) == 5       # newest *valid* step
+    restored, step = restore_checkpoint(str(tmp_path), STATE)
+    assert step == 5
+    assert float(restored["w"][3]) == 3.0
+
+
+def test_latest_step_none_when_nothing_valid(tmp_path):
+    _torn(tmp_path, 1, "no_manifest")
+    assert latest_step(str(tmp_path)) is None
+    with pytest.raises(FileNotFoundError):
+        restore_checkpoint(str(tmp_path), STATE)
+
+
+# ------------------------------------------------------------------ gc
+def test_gc_counts_only_valid_checkpoints(tmp_path):
+    """Torn directories must not crowd good checkpoints out of the
+    ``keep_last`` window: with keep_last=2 and three torn dirs newer than
+    the only valid checkpoint, that checkpoint survives the next save."""
+    save_checkpoint(str(tmp_path), 1, STATE)
+    for step in (2, 3, 4):
+        _torn(tmp_path, step, "no_manifest")
+    save_checkpoint(str(tmp_path), 9, STATE, keep_last=2)
+    names = sorted(p.name for p in tmp_path.glob("step_*"))
+    # both valid checkpoints kept, every torn dir swept
+    assert names == ["step_000000001", "step_000000009"]
+    assert latest_step(str(tmp_path)) == 9
+    restored, step = restore_checkpoint(str(tmp_path), STATE, step=1)
+    assert step == 1
+
+
+def test_save_sweeps_stale_tmp_and_old_leftovers(tmp_path):
+    """Crash leftovers (.tmp staging, .old move-aside) from an earlier
+    attempt at the SAME step don't block or corrupt a re-publish."""
+    stale_tmp = tmp_path / "step_000000003.tmp"
+    stale_tmp.mkdir()
+    (stale_tmp / "data.msgpack.zst").write_bytes(b"junk")
+    stale_old = tmp_path / "step_000000003.old"
+    stale_old.mkdir()
+    save_checkpoint(str(tmp_path), 3, STATE)
+    assert not stale_tmp.exists() and not stale_old.exists()
+    # republishing over an existing final also round-trips
+    save_checkpoint(str(tmp_path), 3, STATE)
+    restored, step = restore_checkpoint(str(tmp_path), STATE)
+    assert step == 3 and float(restored["w"][5]) == 5.0
+
+
+# --------------------------------------------------------------- async
+def test_async_checkpointer_surfaces_error_on_wait(tmp_path):
+    blocker = tmp_path / "ckpts"
+    blocker.write_text("a file where the checkpoint dir should be")
+    ck = AsyncCheckpointer(str(blocker))
+    ck.save(1, {"w": jnp.zeros(4)})              # background thread fails
+    with pytest.raises(OSError):
+        ck.wait()
+    ck.wait()                                    # error cleared, no re-raise
+
+
+def test_async_checkpointer_surfaces_error_on_next_save(tmp_path):
+    blocker = tmp_path / "ckpts"
+    blocker.write_text("a file where the checkpoint dir should be")
+    ck = AsyncCheckpointer(str(blocker))
+    ck.save(1, {"w": jnp.zeros(4)})
+    with pytest.raises(OSError):
+        ck.save(2, {"w": jnp.zeros(4)})          # save() drains the error
+    # the failed handoff doesn't wedge the writer: repoint and succeed
+    ck.directory = str(tmp_path / "ok")
+    ck.save(3, {"w": jnp.full((4,), 7.0)})
+    ck.wait()
+    assert latest_step(ck.directory) == 3

@@ -8,10 +8,11 @@ import os
 import numpy as np
 import pytest
 
-from repro.core import (ChainDriver, ControlPlane, DecisionJournal,
-                        EnvConfig, FallbackPolicy, ReactivePolicy,
-                        ReplayCheckpointCache, RetryPolicy,
-                        TransientControlError)
+from repro.core import (ChainDriver, CircuitBreaker, ControlPlane,
+                        DecisionJournal, EnvConfig, FallbackPolicy,
+                        JournalCorruptionError, ReactivePolicy,
+                        ReplayCheckpointCache, RetryExhaustedError,
+                        RetryPolicy, TransientControlError)
 from repro.sim import FaultPlan, get_fault_spec, synthesize_trace
 from repro.sim.trace import V100
 from repro.train.fault import PreemptionGuard
@@ -84,6 +85,74 @@ def test_retry_policy_recovers_and_gives_up():
     assert len(calls) < 10
 
 
+def test_retry_give_up_names_op_attempts_elapsed():
+    """Final give-up raises RetryExhaustedError naming the op, attempt
+    count and elapsed wall time (chained from the transient error), on
+    both the max-attempts and the deadline paths."""
+    t = {"now": 0.0}
+    rp = RetryPolicy(max_attempts=3, base_delay_s=0.1, seed=0,
+                     sleep=lambda d: t.__setitem__("now", t["now"] + d),
+                     clock=lambda: t["now"])
+
+    def always():
+        raise TransientControlError("down")
+
+    with pytest.raises(RetryExhaustedError) as ei:
+        rp.call(always, op_name="submit")
+    msg = str(ei.value)
+    assert "submit" in msg and "3 attempts" in msg and "elapsed" in msg
+    assert isinstance(ei.value.__cause__, TransientControlError)
+    # RetryExhaustedError IS-A TransientControlError (compat contract)
+    assert isinstance(ei.value, TransientControlError)
+
+    t["now"] = 0.0
+    rp2 = RetryPolicy(max_attempts=100, base_delay_s=10.0, max_delay_s=10.0,
+                      deadline_s=5.0, seed=0,
+                      sleep=lambda d: t.__setitem__("now", t["now"] + d),
+                      clock=lambda: t["now"])
+    with pytest.raises(RetryExhaustedError) as ei2:
+        rp2.call(always, op_name="cancel")
+    assert "cancel" in str(ei2.value) and "deadline" in str(ei2.value)
+
+
+def test_retry_deadline_exact_edge():
+    """A delay landing *exactly* on the deadline is still taken (the
+    deadline is inclusive); only strict overrun gives up."""
+    # reproduce the first jittered delay from the seeded stream
+    d0 = min(0.1 * 2.0 ** 0, 1.0) * (
+        0.5 + float(np.random.default_rng(7).random()))
+    t = {"now": 0.0}
+    slept = []
+
+    def sleep(d):
+        slept.append(d)
+        t["now"] += d
+
+    rp = RetryPolicy(max_attempts=10, base_delay_s=0.1, max_delay_s=1.0,
+                     deadline_s=d0, seed=7, sleep=sleep,
+                     clock=lambda: t["now"])
+    state = {"left": 1}
+
+    def once():
+        if state["left"] > 0:
+            state["left"] -= 1
+            raise TransientControlError("flap")
+        return "ok"
+
+    # first retry's delay == deadline exactly -> allowed, op succeeds
+    assert rp.call(once) == ("ok", 1)
+    assert slept == [d0]
+
+    # but the very next delay after that would overrun -> give up
+    state["left"] = 5
+    t["now"] = 0.0
+    rp2 = RetryPolicy(max_attempts=10, base_delay_s=0.1, max_delay_s=1.0,
+                      deadline_s=d0, seed=7, sleep=sleep,
+                      clock=lambda: t["now"])
+    with pytest.raises(RetryExhaustedError):
+        rp2.call(once)
+
+
 def test_control_plane_replays_same_errors():
     """Ctrl errors are a pure function of (ctrl_seed, op index): two
     control planes over the same plan see identical error sequences."""
@@ -111,20 +180,91 @@ def test_control_plane_replays_same_errors():
 
 # ------------------------------------------------------------- journal
 def test_decision_journal_torn_tail(tmp_path):
+    """A crash mid-append leaves a partial trailing frame — replay drops
+    exactly that and keeps the durable prefix."""
     p = str(tmp_path / "journal.msgpack")
     j = DecisionJournal(p)
     recs = [{"i": k, "a": k % 2, "fb": False} for k in range(5)]
     for r in recs:
         j.append(r)
     assert j.replay() == recs
+    size = os.path.getsize(p)
     with open(p, "ab") as f:
-        f.write(b"\x85\xa1")         # a record truncated mid-write
+        f.write(b"\x85\xa1")         # partial frame header (< 8 bytes)
     assert j.replay() == recs        # torn tail dropped, prefix intact
-    j.append({"i": 5, "a": 1, "fb": True})
-    # the torn bytes corrupt the stream at their offset; everything
-    # before them — the durable prefix — is what crash recovery relies on
-    assert j.replay()[:5] == recs
+    # truncation mid-body (frame header durable, body short) is torn too
+    with open(p, "rb+") as f:
+        f.truncate(size - 3)
+    assert j.replay() == recs[:4]
     assert DecisionJournal(str(tmp_path / "missing")).replay() == []
+
+
+def test_decision_journal_raises_on_mid_file_corruption(tmp_path):
+    """Corrupt bytes *before* the end of the journal (a bit flip inside a
+    complete record) raise instead of silently truncating — a silently
+    shortened journal would resume divergently."""
+    p = str(tmp_path / "journal.msgpack")
+    j = DecisionJournal(p)
+    sizes = []
+    for k in range(6):
+        j.append({"i": k, "a": k % 2, "fb": False})
+        sizes.append(os.path.getsize(p))
+    blob = open(p, "rb").read()
+    # flip one byte inside the SECOND record's CRC-protected body
+    # (past its 8-byte frame header)
+    off = sizes[0] + 8
+    corrupted = blob[:off] + bytes([blob[off] ^ 0xFF]) + blob[off + 1:]
+    open(p, "wb").write(corrupted)
+    with pytest.raises(JournalCorruptionError):
+        j.replay()
+
+
+# ------------------------------------------------------------- breaker
+def test_circuit_breaker_trips_cools_down_and_probes():
+    """closed -> open at `threshold` failures in the sliding window;
+    half-open after the cooldown; one probe closes or re-opens it."""
+    t = {"now": 0.0}
+    br = CircuitBreaker(window=8, threshold=3, cooldown_s=5.0,
+                        clock=lambda: t["now"])
+    assert br.state == CircuitBreaker.CLOSED and br.allow()
+    # failures interleaved with successes: trips on the 3rd failure
+    # inside the 8-outcome window
+    for ok in (False, True, False):
+        br.record(ok)
+        assert br.state == CircuitBreaker.CLOSED
+    br.record(False)
+    assert br.state == CircuitBreaker.OPEN
+    assert br.n_trips == 1
+    assert not br.allow()                        # still cooling down
+    t["now"] = 4.99
+    assert not br.allow()
+    t["now"] = 5.0                               # cooldown elapsed
+    assert br.allow()                            # admits the probe...
+    assert br.state == CircuitBreaker.HALF_OPEN
+    br.record(False)                             # ...probe fails: re-open
+    assert br.state == CircuitBreaker.OPEN and br.n_trips == 2
+    assert not br.allow()                        # fresh cooldown from now
+    t["now"] = 10.0
+    assert br.allow()
+    br.record(True)                              # probe succeeds: close
+    assert br.state == CircuitBreaker.CLOSED
+    # recovery cleared the window: old failures don't linger
+    br.record(False)
+    br.record(False)
+    assert br.state == CircuitBreaker.CLOSED
+
+
+def test_circuit_breaker_window_slides_and_forced_trip():
+    t = {"now": 0.0}
+    br = CircuitBreaker(window=4, threshold=3, cooldown_s=1.0,
+                        clock=lambda: t["now"])
+    # 2 failures then enough successes to push them out of the window
+    for ok in (False, False, True, True, True, False, False):
+        br.record(ok)
+    assert br.state == CircuitBreaker.CLOSED    # never 3 in any window of 4
+    br.trip()                                   # chaos/bench force-open
+    assert br.state == CircuitBreaker.OPEN and not br.allow()
+    assert br.n_trips == 1
 
 
 # ------------------------------------------------------------ fallback

@@ -1,0 +1,285 @@
+"""Multi-tenant provisioning service (ISSUE 8 tentpole): dynamic
+batching equivalence, kill-at-arbitrary-point recovery, circuit-breaker
+degradation, deadline-aware load shedding and graceful drain. All chaos
+is seeded and clocks/sleeps are injected — no wall-clock waits.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (ChainDriver, CircuitBreaker, EnvConfig,
+                        FallbackPolicy, ReactivePolicy,
+                        ReplayCheckpointCache, RetryPolicy)
+from repro.serve import ProvisionService, ServiceConfig
+from repro.sim import get_fault_spec, synthesize_trace
+from repro.sim.trace import V100
+from repro.train.fault import PreemptionGuard
+
+HOUR = 3600.0
+DAY = 24 * HOUR
+SEED = 11
+TENANTS = 6
+LINKS = 2
+
+
+class Kill(BaseException):
+    """Abrupt process death: NOT an Exception, so FallbackPolicy cannot
+    catch it — it rips straight through the serving loop like SIGKILL."""
+
+
+class Ticker:
+    """Injectable monotonic clock: every read advances it a little."""
+
+    def __init__(self, tick=0.001):
+        self.now = 0.0
+        self.tick = tick
+
+    def __call__(self):
+        self.now += self.tick
+        return self.now
+
+
+def _retry_factory(i):
+    return RetryPolicy(seed=100 + i, sleep=lambda s: None)
+
+
+@pytest.fixture(scope="module")
+def world():
+    jobs = synthesize_trace(V100, months=1, seed=5, load_scale=1.0)
+    plan = get_fault_spec("faulty").make_plan(
+        jobs[-1].submit_time + 3 * DAY, V100.n_nodes, seed=3)
+    cfg = EnvConfig(n_nodes=V100.n_nodes, history=12, interval=1800.0,
+                    sub_limit=8 * HOUR, faults=plan)
+    cache = ReplayCheckpointCache(jobs, cfg.n_nodes, faults=plan)
+    return jobs, cfg, cache
+
+
+def _service(world, policy=None, svc=None, journal_dir=None, **kw):
+    jobs, cfg, cache = world
+    kw.setdefault("retry_factory", _retry_factory)
+    return ProvisionService(
+        jobs, cfg, policy or FallbackPolicy(ReactivePolicy()),
+        svc=svc or ServiceConfig(tenants=TENANTS, links=LINKS, max_batch=4),
+        seed=SEED, journal_dir=journal_dir, cache=cache, **kw)
+
+
+@pytest.fixture(scope="module")
+def reference(world):
+    """Uninterrupted run — the identity target for every chaos variant."""
+    res = _service(world).run()
+    assert res.reason == "completed"
+    return res
+
+
+def _schedules(res):
+    return [t.schedule for t in res.tenants]
+
+
+# ------------------------------------------------------- batching == solo
+def test_batched_service_matches_independent_drivers(world, reference):
+    """Multiplexing N lanes behind one act_batch call changes nothing:
+    each tenant's schedule is bit-identical to a solo ChainDriver run
+    with the same (seed, cache, retry stream)."""
+    jobs, cfg, cache = world
+    for i, t in enumerate(reference.tenants):
+        solo = ChainDriver(jobs, cfg, FallbackPolicy(ReactivePolicy()),
+                           links=LINKS, seed=SEED + i, cache=cache,
+                           retry=_retry_factory(i)).run()
+        assert solo.schedule == t.schedule
+        assert t.reason == "completed"
+    assert reference.n_decisions == sum(t.n_decisions
+                                        for t in reference.tenants)
+    assert reference.n_replayed == 0 and reference.n_shed == 0
+    assert len(reference.latencies_s) == reference.n_decisions
+    assert reference.p99_latency_s >= 0.0
+
+
+# -------------------------------------------------------- kill & restart
+@pytest.mark.parametrize("kill_after_batches", [1, 7])
+def test_kill_at_arbitrary_point_restart_identical(world, reference,
+                                                   tmp_path,
+                                                   kill_after_batches):
+    """The acceptance test: a service killed abruptly (uncatchable
+    exception mid-batch, plus a torn journal tail) and restarted against
+    its journals finishes with per-tenant schedules bit-identical to the
+    uninterrupted run — no lost, no double-applied decisions."""
+    jdir = str(tmp_path / f"j{kill_after_batches}")
+
+    class Dying(ReactivePolicy):
+        def __init__(self):
+            super().__init__()
+            self.batches = 0
+
+        def act_batch(self, obs):
+            if self.batches >= kill_after_batches:
+                raise Kill()
+            self.batches += 1
+            return super().act_batch(obs)
+
+    first = _service(world, policy=FallbackPolicy(Dying()),
+                     journal_dir=jdir)
+    with pytest.raises(Kill):
+        first.run()
+    applied = first.n_decisions
+    assert 0 < applied < reference.n_decisions
+
+    # the crash also tore the tail of one tenant's journal mid-append
+    with open(f"{jdir}/tenant_00000.journal", "ab") as f:
+        f.write(b"\x00\x01\x02")
+
+    resumed = _service(world, journal_dir=jdir)
+    res = resumed.run()
+    assert res.reason == "completed"
+    assert res.n_replayed == applied          # every journaled decision
+    assert res.n_replayed + res.n_decisions == reference.n_decisions
+    assert _schedules(res) == _schedules(reference)
+
+    # a second rehydrate replays everything and applies nothing new
+    replay_only = _service(world, journal_dir=jdir).run()
+    assert replay_only.n_replayed == reference.n_decisions
+    assert replay_only.n_decisions == 0
+    assert _schedules(replay_only) == _schedules(reference)
+
+
+# ------------------------------------------------------- circuit breaker
+def test_breaker_trips_on_sick_learner_and_keeps_answering(world,
+                                                           reference):
+    """A persistently failing learner trips the fleet-wide breaker: the
+    service stops consulting it and keeps answering reactively, with the
+    schedule unchanged (the fallback IS the reactive rule)."""
+    calls = {"n": 0}
+
+    class Sick(ReactivePolicy):
+        def act_batch(self, obs):
+            calls["n"] += 1
+            raise RuntimeError("learner OOM")
+
+    svc = ServiceConfig(tenants=TENANTS, links=LINKS, max_batch=4,
+                        breaker_window=8, breaker_threshold=3,
+                        breaker_cooldown_s=float("inf"))
+    s = _service(world, policy=FallbackPolicy(Sick()), svc=svc)
+    res = s.run()
+    assert res.reason == "completed"
+    assert res.breaker_trips == 1
+    assert calls["n"] == 3                    # consults stop at the trip
+    # only the pre-trip batches (possibly ragged) consulted the learner
+    assert 0 < res.n_decisions - res.n_degraded <= 3 * svc.max_batch
+    assert res.n_degraded > 0
+    assert _schedules(res) == _schedules(reference)
+
+
+def test_breaker_forced_open_serves_reactive(world, reference):
+    """Chaos/ops can force the breaker open: the learner is never
+    consulted, every decision is degraded, nothing stalls."""
+    calls = {"n": 0}
+
+    class Counting(ReactivePolicy):
+        def act_batch(self, obs):
+            calls["n"] += 1
+            return super().act_batch(obs)
+
+    br = CircuitBreaker(cooldown_s=float("inf"))
+    br.trip()
+    s = _service(world, policy=FallbackPolicy(Counting()), breaker=br)
+    res = s.run()
+    assert res.reason == "completed"
+    assert calls["n"] == 0
+    assert res.n_degraded == res.n_decisions > 0
+    assert _schedules(res) == _schedules(reference)
+
+
+def test_breaker_half_open_probe_recovers(world, reference):
+    """After the cooldown a half-open probe reaches the (recovered)
+    learner and closes the breaker — degradation is temporary."""
+    clock = Ticker(tick=0.01)
+    state = {"failures_left": 3, "consults": 0}
+
+    class Flaky(ReactivePolicy):
+        def act_batch(self, obs):
+            state["consults"] += 1
+            if state["failures_left"] > 0:
+                state["failures_left"] -= 1
+                raise RuntimeError("transient learner brownout")
+            return super().act_batch(obs)
+
+    svc = ServiceConfig(tenants=TENANTS, links=LINKS, max_batch=4,
+                        breaker_window=8, breaker_threshold=3,
+                        breaker_cooldown_s=0.5)
+    s = _service(world, policy=FallbackPolicy(Flaky(), clock=clock),
+                 svc=svc, clock=clock)
+    res = s.run()
+    assert res.reason == "completed"
+    assert res.breaker_trips == 1             # tripped once, then healed
+    assert res.n_degraded > 0                 # served through the outage
+    assert s.breaker.state == CircuitBreaker.CLOSED
+    assert state["consults"] > 4              # probed and kept consulting
+    assert _schedules(res) == _schedules(reference)
+
+
+# ---------------------------------------------------------- load shedding
+def test_overload_sheds_bounded_with_hints(world, reference):
+    """A slow policy under a tight SLO sheds the tail of every round —
+    bounded per-tenant counts with retry-after hints — while the
+    head-of-line batch always proceeds, and shedding (a wall-clock
+    delay) leaves every schedule untouched."""
+    clock = Ticker(tick=0.001)
+
+    class Slow(ReactivePolicy):
+        def act_batch(self, obs):
+            clock.now += 10.0                 # one batch costs ~10s
+            return super().act_batch(obs)
+
+    svc = ServiceConfig(tenants=TENANTS, links=LINKS, max_batch=2,
+                        max_queue=4, slo_s=15.0)
+    s = _service(world, policy=FallbackPolicy(Slow()), svc=svc,
+                 clock=clock)
+    res = s.run()
+    assert res.reason == "completed"
+    assert res.n_shed > 0
+    assert sum(res.shed_per_tenant) == res.n_shed
+    # bounded: nobody is shed more than once per service round
+    assert max(res.shed_per_tenant) <= res.n_rounds
+    shed_tenants = [i for i, n in enumerate(res.shed_per_tenant) if n]
+    assert shed_tenants
+    assert all(s.retry_after_s[i] > 0.0 for i in shed_tenants)
+    # wall-clock shedding never leaks into simulated time
+    assert _schedules(res) == _schedules(reference)
+    assert res.n_decisions == reference.n_decisions
+
+
+# ------------------------------------------------------- drain & health
+def test_graceful_drain_health_and_rehydrate(world, reference, tmp_path):
+    jdir = str(tmp_path / "drain")
+    guard = PreemptionGuard(install_signals=False)
+
+    class TripsGuard(ReactivePolicy):
+        def __init__(self):
+            super().__init__()
+            self.batches = 0
+
+        def act_batch(self, obs):
+            self.batches += 1
+            if self.batches == 3:
+                guard.trigger()               # preemption notice mid-round
+            return super().act_batch(obs)
+
+    s = _service(world, policy=FallbackPolicy(TripsGuard()),
+                 journal_dir=jdir, guard=guard)
+    h0 = s.health()
+    assert not h0.ready and h0.tenants == TENANTS
+    res = s.run()
+    assert res.reason == "drained"
+    assert 0 < res.n_decisions < reference.n_decisions
+    assert any(t.reason == "drained" for t in res.tenants)
+    h1 = s.health()
+    assert h1.draining and not h1.ready
+    assert h1.n_decisions == res.n_decisions
+    assert h1.tenants_live > 0 and h1.breaker_state == "closed"
+
+    s2 = _service(world, journal_dir=jdir)
+    res2 = s2.run()
+    assert res2.reason == "completed"
+    assert res2.n_replayed == res.n_decisions
+    assert _schedules(res2) == _schedules(reference)
+    h2 = s2.health()
+    assert h2.tenants_live == 0 and h2.queue_depth == 0
+    assert h2.max_lag_rounds == 0
