@@ -19,11 +19,10 @@ import numpy as np
 
 from repro.core import (DQNConfig, DQNLearner, EnvConfig, FoundationConfig,
                         MiragePolicy, PGConfig, PGLearner,
-                        ReplayCheckpointCache, TreePolicy,
-                        VectorProvisionEnv, evaluate_batch)
+                        ReplayCheckpointCache, TreePolicy, evaluate_batch)
 from repro.core.agent import ALL_METHODS
 from repro.core.trees import GradientBoosting, RandomForest
-from repro.sim import get_scenario
+from repro.sim import get_scenario, make_vector_env
 
 from .common import emit
 
@@ -68,7 +67,7 @@ def bench_eval_throughput(batch: int = EVAL_BATCH):
     cfg = sc.env_config(history=HISTORY, interval=INTERVAL)
 
     cache = ReplayCheckpointCache(jobs, sc.profile.n_nodes)
-    venv = VectorProvisionEnv(jobs, cfg, batch, seed=0, cache=cache)
+    venv = make_vector_env(jobs, cfg, batch, seed=0, cache=cache)
     # warm-up pass: pays the background replay once (steady-state grid
     # regime) and compiles each learner's jitted forward at both shapes
     # the timed sides use (B and the scalar path's B=1)
@@ -97,10 +96,10 @@ def bench_eval_throughput(batch: int = EVAL_BATCH):
     policies["avg"].avg.waits = avg_warm
     t_scalar_total = 0.0
     for m in ALL_METHODS:
-        venv1 = VectorProvisionEnv(jobs, cfg, 1, seed=0,
-                                   cache=ReplayCheckpointCache(
-                                       jobs, cfg.n_nodes,
-                                       interval=float("inf")))
+        venv1 = make_vector_env(jobs, cfg, 1, seed=0,
+                                cache=ReplayCheckpointCache(
+                                    jobs, cfg.n_nodes,
+                                    interval=float("inf")))
         t0 = time.perf_counter()
         evaluate_batch(venv1, policies[m], episodes=SCALAR_EPISODES, seed=17)
         dt = time.perf_counter() - t0

@@ -95,7 +95,8 @@ def bench_rollout_throughput(batch: int = 32):
     the whole training split (the paper trains on 16 months), so the
     per-episode warm-up replay — the part the cache amortizes — scales
     with trace length while the episode itself does not."""
-    from repro.core import EnvConfig, ProvisionEnv, VectorProvisionEnv
+    from repro.core import EnvConfig
+    from repro.sim import make_env, make_vector_env
 
     jobs = synthesize_trace(V100, months=6, seed=4, load_scale=0.9)
     cfg = EnvConfig(n_nodes=V100.n_nodes, history=12, interval=1800.0)
@@ -104,7 +105,7 @@ def bench_rollout_throughput(batch: int = 32):
     def scalar_rollouts():
         steps = 0
         for i in range(batch):
-            env = ProvisionEnv(jobs, cfg, seed=i)
+            env = make_env(jobs, cfg, seed=i)
             env.reset()
             t, done = 0, False
             while not done:
@@ -113,7 +114,7 @@ def bench_rollout_throughput(batch: int = 32):
             steps += t
         return steps
 
-    venv = VectorProvisionEnv(jobs, cfg, batch, seed=0)
+    venv = make_vector_env(jobs, cfg, batch, seed=0)
 
     def vector_rollouts():
         venv.reset()
@@ -128,7 +129,12 @@ def bench_rollout_throughput(batch: int = 32):
     steps_s, t_scalar = timed(scalar_rollouts)
     steps_v, t_cold = timed(vector_rollouts)      # epoch 1: cache cold
     assert steps_s == steps_v, "scalar/vector must do identical episodes"
-    steps_w, t_warm = timed(vector_rollouts)      # epoch 2: cache warm
+    # warm epochs (the steady-state training regime): each epoch redraws
+    # its episode start points, so per-epoch wall time varies with the
+    # sampled queue waits — the median of three is the tracked number
+    warm = sorted((timed(vector_rollouts) for _ in range(3)),
+                  key=lambda r: r[1])
+    steps_w, t_warm = warm[1]
     eps_s = batch / t_scalar
     eps_cold = batch / t_cold
     eps_warm = batch / t_warm
@@ -141,13 +147,15 @@ def bench_rollout_throughput(batch: int = 32):
         "vector_env_steps_per_s": steps_w / t_warm,
         "speedup": eps_warm / eps_s,
         "speedup_cold": eps_cold / eps_s,
+        "differential_hit_rate": venv.differential_hit_rate,
         "checkpoints": len(venv.cache),
         "checkpoint_mb": venv.cache.nbytes / 2**20,
-        "target": ">=13.6x warm episodes/sec at B=32",
+        "target": ">=17 warm episodes/sec at B=32",
     }
     emit("rollout_throughput", t_warm / batch * 1e6,
          f"warm={eps_warm:.1f} cold={eps_cold:.1f} scalar={eps_s:.2f} eps/s "
-         f"speedup={eps_warm/eps_s:.1f}x (target >=13.6x)", payload)
+         f"diff_hit={venv.differential_hit_rate:.3f} "
+         f"(target >=17 warm eps/s)", payload)
     return payload
 
 
@@ -163,8 +171,8 @@ def bench_rollout_faulty(batch: int = 32):
     bit-identical to the fault-free engine by test
     (test_fault_plan_none_bit_identical); this gates that it is also
     ~free (ratio ~1.0), i.e. fault support costs nothing when unused."""
-    from repro.core import EnvConfig, VectorProvisionEnv
-    from repro.sim import FaultPlan, get_fault_spec
+    from repro.core import EnvConfig
+    from repro.sim import FaultPlan, get_fault_spec, make_vector_env
 
     jobs = synthesize_trace(V100, months=3, seed=4, load_scale=0.9)
     plan = get_fault_spec("faulty").make_plan(
@@ -174,7 +182,7 @@ def bench_rollout_faulty(batch: int = 32):
     def warm_eps(faults):
         cfg = EnvConfig(n_nodes=V100.n_nodes, history=12, interval=1800.0,
                         faults=faults)
-        venv = VectorProvisionEnv(jobs, cfg, batch, seed=0)
+        venv = make_vector_env(jobs, cfg, batch, seed=0)
 
         def epoch():
             venv.reset()
@@ -192,11 +200,11 @@ def bench_rollout_faulty(batch: int = 32):
         infos, t_warm = timed(epoch)     # warm epoch: steady-state regime
         n_faults = sum(i.get("n_faults", 0) for i in infos)
         n_requeues = sum(i.get("n_requeues", 0) for i in infos)
-        return batch / t_warm, n_faults, n_requeues
+        return batch / t_warm, n_faults, n_requeues, venv.differential_hit_rate
 
-    eps_faulty, n_faults, n_requeues = warm_eps(plan)
-    eps_none, _, _ = warm_eps(FaultPlan.none())
-    eps_off, _, _ = warm_eps(None)
+    eps_faulty, n_faults, n_requeues, hit_rate = warm_eps(plan)
+    eps_none, _, _, _ = warm_eps(FaultPlan.none())
+    eps_off, _, _, _ = warm_eps(None)
     ratio = eps_none / eps_off
     payload = {
         "batch": batch,
@@ -204,6 +212,7 @@ def bench_rollout_faulty(batch: int = 32):
         "empty_plan_episodes_per_s": eps_none,
         "faults_off_episodes_per_s": eps_off,
         "zero_fault_ratio": ratio,
+        "differential_hit_rate": hit_rate,
         "fault_windows": len(plan) // 2,
         "lane_faults_per_epoch": n_faults,
         "lane_requeues_per_epoch": n_requeues,

@@ -26,7 +26,10 @@ def control_plane_demo():
     jobs = sc.make_trace(months=1, seed=0)
     print(f"scenario {sc.name}:",
           {k: round(v, 2) for k, v in trace_stats(jobs).items()})
-    # one checkpoint cache shares the background replay across policies
+    # one checkpoint cache shares the background replay (and the
+    # differential engine's immutable timeline) across policies; env
+    # construction goes through the repro.sim.make_env/make_vector_env
+    # factories (Scenario.make_* delegates to them)
     cache = ReplayCheckpointCache(jobs, sc.profile.n_nodes)
     env = sc.make_env(trace=jobs, seed=0, history=24, interval=1800.0,
                       cache=cache)

@@ -34,7 +34,8 @@ sys.path.insert(0, str(ROOT))
 TRACKED = {
     "rollout_throughput": {
         "suite": "rollout throughput",
-        "metrics": {"vector_episodes_per_s": "up", "speedup": "up"},
+        "metrics": {"vector_episodes_per_s": "up", "speedup": "up",
+                    "differential_hit_rate": "up"},
     },
     "rollout_faulty": {
         "suite": "rollout faulty",

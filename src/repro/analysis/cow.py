@@ -23,6 +23,12 @@ Scope: numpy arrays only. The shared ``_jobs`` list / ``_by_id`` dict
 and the boundary ``Job`` objects are Python containers the sanitizer
 cannot freeze; those stay covered by ``test_cow_fork_isolation``.
 
+``SlurmSimulator.schedule_view()`` — the one supported cross-module
+read of the schedule arrays — applies this same freeze *unconditionally*
+at the API boundary (every returned view array is non-writeable even
+with the sanitizer off), so consumers like ``BackgroundTimeline`` can
+never write through a view into a lane's private state.
+
 Enable with ``REPRO_COW_SANITIZE=1`` in the environment, or
 ``repro.analysis.cow.enable()`` / the ``sanitized()`` context manager.
 The test suite runs fully sanitized (tests/conftest.py).

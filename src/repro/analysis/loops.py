@@ -25,6 +25,7 @@ from .base import Finding, Pass
 #: modules where vectorization over lanes is the contract
 HOT_MODULES = (
     "repro/sim/simulator.py",
+    "repro/sim/timeline.py",
     "repro/core/state.py",
     "repro/core/policy.py",
     "repro/core/provisioner.py",

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.sim.scenarios import make_vector_env
 from repro.train.optimizer import OptimizerConfig, adamw_update, init_opt_state
 from .baselines import AvgWaitPolicy, ReactivePolicy, TreePolicy
 from .dqn import DQNConfig, DQNLearner
@@ -130,8 +131,8 @@ def train_online_dqn(env: ProvisionEnv, learner: DQNLearner,
                                                faults=env.cfg.faults)
     while len(returns) < episodes:
         b = min(B, episodes - len(returns))
-        venv = VectorProvisionEnv(env.trace, env.cfg, b,
-                                  seed=seed + len(returns), cache=cache)
+        venv = make_vector_env(env.trace, env.cfg, b,
+                               seed=seed + len(returns), cache=cache)
         trajs, finals = _rollout_batch(
             venv, lambda m: learner.act_batch(m, explore=True))
         for i in range(b):
@@ -154,8 +155,8 @@ def train_online_pg(env: ProvisionEnv, learner: PGLearner,
                                                faults=env.cfg.faults)
     while len(returns) < episodes:
         b = min(B, episodes - len(returns))
-        venv = VectorProvisionEnv(env.trace, env.cfg, b,
-                                  seed=seed + len(returns), cache=cache)
+        venv = make_vector_env(env.trace, env.cfg, b,
+                               seed=seed + len(returns), cache=cache)
         trajs, finals = _rollout_batch(
             venv, lambda m: learner.act_batch(m, explore=True))
         for i in range(b):
@@ -289,8 +290,7 @@ def evaluate_batch(venv: VectorProvisionEnv, policy: Policy,
         chunk = t_starts[c0:c0 + venv.batch]
         v = venv
         if len(chunk) != venv.batch:          # tail chunk: smaller env,
-            v = VectorProvisionEnv(venv.trace, venv.cfg, len(chunk),
-                                   seed=venv.seed, cache=venv.cache)
+            v = venv.resized(len(chunk))
         obs = v.reset(t_starts=chunk)
         policy.reset_lanes(np.ones(v.batch, bool))
         finals: List[Optional[Dict]] = [None] * v.batch

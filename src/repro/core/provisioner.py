@@ -40,6 +40,7 @@ from __future__ import annotations
 import bisect
 import copy
 import dataclasses
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -69,6 +70,10 @@ class EnvConfig:
     # deterministic fault schedule threaded into every simulator the env
     # (or its checkpoint cache) builds; None == fault-free
     faults: Optional[FaultPlan] = None
+    # serve vector-env resets from the differential engine (the immutable
+    # background timeline) where provably exact, falling back to real
+    # forks otherwise; False forces the classic fork-per-lane path
+    differential: bool = True
 
 
 class ProvisionEnv:
@@ -223,14 +228,13 @@ class ProvisionEnv:
 
 
 def _sim_nbytes(sim: SlurmSimulator) -> int:
-    """Estimated marginal memory of one checkpoint fork: only the state
-    ``fork()`` copies eagerly (start/end, running arrays, finished list)
-    — the job-store arrays and containers are shared copy-on-write with
-    the frontier and amortize across the whole ring."""
-    n = 0
-    for name in ("_start", "_end", "_run_i", "_run_end"):
-        n += getattr(sim, name).nbytes
-    return n + 8 * len(sim._fin) + 2048
+    """Deprecated shim (one release): use ``sim.fork_nbytes()``. The
+    estimate moved behind the simulator boundary so callers stop sizing
+    private arrays directly."""
+    warnings.warn("_sim_nbytes() is deprecated; use "
+                  "SlurmSimulator.fork_nbytes()", DeprecationWarning,
+                  stacklevel=2)
+    return sim.fork_nbytes()
 
 
 class ReplayCheckpointCache:
@@ -269,6 +273,7 @@ class ReplayCheckpointCache:
         self._times: List[float] = []
         self._sims: List[SlurmSimulator] = []
         self._bytes: List[int] = []
+        self._timeline = None
         self.hits = 0
         self.misses = 0
 
@@ -281,26 +286,71 @@ class ReplayCheckpointCache:
 
     def fork_at(self, t: float) -> SlurmSimulator:
         """A forked simulator advanced to exactly ``t`` (>= 0)."""
-        if t == self._frontier.now:
-            self.hits += 1                  # no replay needed at all
-            return self._frontier.fork()
-        if t > self._frontier.now:
+        hit, sim = self._fork_at(t)
+        if hit:
+            self.hits += 1
+        else:
             self.misses += 1
+        return sim
+
+    def fork_quiet(self, t: float) -> SlurmSimulator:
+        """``fork_at`` without touching the hit/miss counters. Used by the
+        differential engine's materialization forks, which the counters
+        are not meant to measure (``timeline()`` does its own accounting:
+        one miss to build, a hit per reuse)."""
+        return self._fork_at(t)[1]
+
+    def _fork_at(self, t: float) -> Tuple[bool, SlurmSimulator]:
+        if t == self._frontier.now:
+            return True, self._frontier.fork()   # no replay needed at all
+        if t > self._frontier.now:
             self._advance_frontier(t)
-            return self._frontier.fork()
+            return False, self._frontier.fork()
         j = bisect.bisect_right(self._times, t) - 1
         if j >= 0:
-            self.hits += 1
             f = self._sims[j].fork()
             f.run_until(t)
-            return f
+            return True, f
         # no checkpoint early enough (evicted): fresh short replay
-        self.misses += 1
         sim = SlurmSimulator(self._frontier.cluster.n_nodes,
                              mode=self._frontier.mode, faults=self.faults)
         sim.load([copy.copy(j) for j in self.trace])
         sim.run_until(t)
-        return sim
+        return False, sim
+
+    def timeline(self):
+        """The immutable ``BackgroundTimeline`` of this cache's replay,
+        built lazily on first call (counted as one miss; every reuse is a
+        hit). On a pristine frontier the recording drains the frontier
+        itself, leaving warm checkpoints behind for later forks; otherwise
+        a throwaway replay records (the replay engine is deterministic, so
+        both record the same timeline)."""
+        if self._timeline is not None:
+            self.hits += 1
+            return self._timeline
+        from repro.sim.timeline import BackgroundTimeline
+        self.misses += 1
+        fr = self._frontier
+        if fr.now == 0.0 and fr._sched_passes == 0 and not self._sims:
+            rec = BackgroundTimeline.record(fr)
+            while True:
+                tn = fr._next_event_time()
+                if tn == float("inf"):
+                    break
+                t = max(tn, fr.now + self.interval)
+                if not np.isfinite(t):
+                    t = tn
+                self._advance_frontier(float(t))
+            sim = fr
+        else:
+            sim = SlurmSimulator(fr.cluster.n_nodes, mode=fr.mode,
+                                 faults=self.faults)
+            sim.load([copy.copy(j) for j in self.trace])
+            rec = BackgroundTimeline.record(sim)
+            sim.run_to_completion()
+        self._timeline = BackgroundTimeline.from_recording(sim, rec,
+                                                           self.faults)
+        return self._timeline
 
     def _advance_frontier(self, t: float) -> None:
         fr = self._frontier
@@ -317,7 +367,7 @@ class ReplayCheckpointCache:
     def _add(self, t: float, sim: SlurmSimulator) -> None:
         self._times.append(t)
         self._sims.append(sim)
-        self._bytes.append(_sim_nbytes(sim))
+        self._bytes.append(sim.fork_nbytes())
         while len(self._sims) > 2 and sum(self._bytes) > self.max_bytes:
             drop = range(len(self._sims) - 2, 0, -2)   # every other interior
             for k in drop:
@@ -381,6 +431,18 @@ class VectorProvisionEnv:
         t0 = trace[0].submit_time
         self._trace_t0 = t0
         self._trace_span = max(trace[-1].submit_time - t0, 1.0)
+        # differential-engine accounting, accumulated across resets:
+        # lane-intervals served straight off the immutable timeline vs.
+        # the total a fork-per-lane reset would have simulated
+        self.reset_stats = {"diff_lanes": 0, "fallback_lanes": 0,
+                            "starts": 0, "cascades": 0,
+                            "hit_intervals": 0, "total_intervals": 0}
+
+    @property
+    def differential_hit_rate(self) -> float:
+        """Fraction of lane-intervals served without a full fork."""
+        total = self.reset_stats["total_intervals"]
+        return self.reset_stats["hit_intervals"] / total if total else 0.0
 
     # ------------------------------------------------------------ helpers
     def _obs_view(self) -> Dict:
@@ -450,6 +512,24 @@ class VectorProvisionEnv:
         return self.envs[0]._t_start_range
 
     # ------------------------------------------------------------ episode
+    def _push_rows(self, lanes: np.ndarray, ts: np.ndarray,
+                   diff: np.ndarray, tl) -> None:
+        """One warm-up history push for ``lanes``: differential lanes
+        sample the shared immutable timeline in one fused pass, fallback
+        lanes sample their live simulators (warm-up has no predecessor,
+        so pred columns are zero either way)."""
+        d = lanes[diff[lanes]]
+        if d.size:
+            sb = tl.sample_lanes(ts[d])
+            out = encode_sample_batch(sb, self.cfg.n_nodes,
+                                      self.cfg.sub_limit, None,
+                                      self._succ_cols[:d.size],
+                                      out=self._slab[:d.size])
+            self._hist.push(out, d)
+        f = lanes[~diff[lanes]]
+        if f.size:
+            self._hist.push(self._encode_lanes(f), f)
+
     def reset(self, t_starts: Optional[Sequence[float]] = None) -> Dict:
         lo, hi = self._t_start_range
         t0s = np.array([float(t_starts[i]) if t_starts is not None
@@ -457,58 +537,128 @@ class VectorProvisionEnv:
                         for i, env in enumerate(self.envs)], np.float64)
         wps = np.array([self.envs[i].warmup_point(t0s[i])
                         for i in range(self.batch)], np.float64)
+        # differential lanes are served from the immutable background
+        # timeline (no per-lane simulator until the predecessor placement
+        # materializes one); lanes whose episode reaches the first fault
+        # event — where the timeline stops being the truth — fall back to
+        # the classic fork-per-lane path
+        tl = self.cache.timeline() if self.cfg.differential else None
+        diff = (np.isfinite(t0s) & (t0s < tl.valid_until)
+                if tl is not None else np.zeros(self.batch, bool))
+        fb = np.flatnonzero(~diff)
         # checkpointed forks, ascending so the frontier advances monotonically
-        for i in np.argsort(wps, kind="stable"):
+        for i in fb[np.argsort(wps[fb], kind="stable")]:
             i = int(i)
-            env = self.envs[i]
-            env.sim = self.cache.fork_at(wps[i])
+            self.envs[i].sim = self.cache.fork_at(wps[i])
+        for env in self.envs:   # repro-static: ok[lane-loop] per-lane attribute clears
             env.hist = None          # the batch ring owns history now
             env.pred = env.succ = env.chain = None
+        for i in np.flatnonzero(diff):
+            self.envs[int(i)].sim = None     # materialized after placement
         self._hist.clear()
         self._has_pred[:] = False
         self._pred_start[:] = -1.0
         idx = np.arange(self.batch)
         # warm-up fill, batched: each lane replays the scalar push sequence
         # (snapshot at the window head, one per interval crossing) but the
-        # encoding runs as one flat pass over all lanes still advancing
-        self._hist.push(self._encode_lanes(idx), idx)
+        # per-lane instants advance as one float64 array — elementwise
+        # identical to each scalar simulator's own now += interval
         ends = wps + np.maximum(t0s - wps, 0.0)
+        ts = wps.copy()
+        pushes = np.ones(self.batch, np.int64)
+        self._push_rows(idx, ts, diff, tl)
         active = idx
         while True:
-            nows = np.fromiter((self.envs[int(i)].sim.now for i in active),
-                               np.float64, active.size)
-            active = active[nows + self.cfg.interval <= ends[active]]
+            active = active[ts[active] + self.cfg.interval <= ends[active]]
             if not active.size:
                 break
-            for i in active:
-                env = self.envs[int(i)]
-                env.sim.step(self.cfg.interval)
-            self._hist.push(self._encode_lanes(active), active)
-        # partial advance to the episode start, then the predecessor
-        for i in range(self.batch):
+            ts[active] = ts[active] + self.cfg.interval
+            for i in active[~diff[active]]:   # repro-static: ok[lane-loop] fallback lanes advance live simulators
+                self.envs[int(i)].sim.step(self.cfg.interval)
+            pushes[active] += 1
+            self._push_rows(active, ts, diff, tl)
+        # partial advance to the episode start (exact float expression of
+        # the scalar step(end - now)), then the predecessor placement
+        t0_eff = np.where(ts < ends, ts + (ends - ts), ts)
+        st = self.reset_stats
+        for i in range(self.batch):   # repro-static: ok[lane-loop] per-lane rng draws + placement materialization
             env = self.envs[i]
-            if env.sim.now < ends[i]:
-                env.sim.step(ends[i] - env.sim.now)
+            t0i = float(t0_eff[i])
             env.chain = SubJobChain(
                 user_id=int(env.rng.integers(1000, 2000)),
                 n_nodes=self.cfg.chain_nodes, sub_limit=self.cfg.sub_limit,
                 next_id=int(env.rng.integers(10**6, 10**7)))
-            env.pred = env.chain.make_sub(0, env.sim.now)
-            env.sim.submit(env.pred)
-            env.sim.run_until_started(env.pred)
+            env.pred = env.chain.make_sub(0, t0i)
+            if diff[i]:
+                pl = tl.place(t0i, env.pred.n_nodes, env.pred.time_limit,
+                              env.pred.runtime, env.pred.job_id,
+                              self.cfg.interval)
+                if pl.kind == "start":
+                    # proved: the job starts at pl.t without displacing
+                    # any background start — fork the background there
+                    # and splice the job in at its in-pass position
+                    sim = self.cache.fork_quiet(pl.t)
+                    sim.adopt_running(env.pred, pl.t, pl.pass_pos,
+                                      pl.pass_size)
+                    st["starts"] += 1
+                    st["hit_intervals"] += int(pushes[i]) + pl.intervals
+                elif pl.kind == "cascade" and pl.t > t0i:
+                    # provable cascade past t0: sync a real fork at the
+                    # last verified-inert instant with the job queued
+                    # (original submit time — age priority survives)
+                    sim = self.cache.fork_quiet(pl.t)
+                    sim.adopt_queued(env.pred)
+                    sim.run_until_started(env.pred)
+                    st["cascades"] += 1
+                    st["hit_intervals"] += int(pushes[i]) + pl.intervals
+                else:
+                    # cascade at the submission instant itself: replay
+                    # the whole decision on a real fork from t0
+                    sim = self.cache.fork_quiet(t0i)
+                    sim.submit(env.pred)
+                    sim.run_until_started(env.pred)
+                    st["cascades"] += 1
+                    st["hit_intervals"] += int(pushes[i])
+                env.sim = sim
+                st["diff_lanes"] += 1
+            else:
+                if env.sim.now < ends[i]:
+                    env.sim.step(ends[i] - env.sim.now)
+                env.sim.submit(env.pred)
+                env.sim.run_until_started(env.pred)
+                st["fallback_lanes"] += 1
             env._fc0 = (env.sim.n_node_failures, env.sim.n_requeues)
-            self._pred_size[i] = env.pred.n_nodes
-            self._pred_limit[i] = env.pred.time_limit
-            self._pred_qtime[i] = max(env.pred.wait_time, 0.0)
-            self._pred_start[i] = env.pred.start_time
-            self._pred_rt[i] = env.pred.runtime
-            self._pred_end[i] = env.pred.start_time + min(
-                env.pred.runtime, env.pred.time_limit)
+        starts = np.fromiter((e.pred.start_time for e in self.envs),
+                             np.float64, self.batch)
+        self._pred_size[:] = np.fromiter(
+            (e.pred.n_nodes for e in self.envs), np.float64, self.batch)
+        self._pred_limit[:] = np.fromiter(
+            (e.pred.time_limit for e in self.envs), np.float64, self.batch)
+        self._pred_rt[:] = np.fromiter(
+            (e.pred.runtime for e in self.envs), np.float64, self.batch)
+        self._pred_qtime[:] = np.maximum(np.fromiter(
+            (e.pred.wait_time for e in self.envs), np.float64, self.batch),
+            0.0)
+        self._pred_start[:] = starts
+        self._pred_end[:] = starts + np.minimum(self._pred_rt,
+                                                self._pred_limit)
+        span = np.maximum(starts - t0_eff, 0.0)
+        st["total_intervals"] += int(pushes.sum()) + int(
+            (span // max(self.cfg.interval, 1.0)).sum()) + self.batch
         self._has_pred[:] = True
         self._hist.push(self._encode_lanes(idx), idx)
         self.dones = np.zeros(self.batch, bool)
         self._refresh_obs(idx)
         return self._obs_view()
+
+    def resized(self, n: int) -> "VectorProvisionEnv":
+        """A new vector env with batch size ``n`` sharing this env's
+        trace, config, seed, and checkpoint cache — evaluate_batch's tail
+        chunks stop re-plumbing constructor arguments through call sites."""
+        if n == self.batch:
+            return self
+        return VectorProvisionEnv(self.trace, self.cfg, n, seed=self.seed,
+                                  cache=self.cache)
 
     def step(self, actions: Sequence[int]
              ) -> Tuple[Dict, np.ndarray, np.ndarray, List[Dict]]:
@@ -562,6 +712,9 @@ def collect_offline_samples(env: ProvisionEnv, n_episodes: int,
     shared ReplayCheckpointCache (chunks after the first fork from warm
     checkpoints instead of re-replaying the trace head).
     """
+    # function-local: scenarios imports repro.core lazily, so a module-
+    # level import here would complete the cycle
+    from repro.sim.scenarios import make_vector_env
     rng = np.random.default_rng(seed)
     lo, hi = env._t_start_range
     ep_t0 = [float(rng.uniform(lo, hi)) for _ in range(n_episodes)]
@@ -573,8 +726,8 @@ def collect_offline_samples(env: ProvisionEnv, n_episodes: int,
     for c0 in range(0, len(lanes), B):
         chunk = lanes[c0:c0 + B]
         n = len(chunk)
-        venv = VectorProvisionEnv(env.trace, env.cfg, n,
-                                  seed=seed + c0, cache=cache)
+        venv = make_vector_env(env.trace, env.cfg, n,
+                               seed=seed + c0, cache=cache)
         obs = venv.reset(t_starts=[ep_t0[ep] for ep, _ in chunk])
         fracs = np.array([(p + 0.5) / n_points for _, p in chunk],
                          np.float64)

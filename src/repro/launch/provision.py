@@ -56,7 +56,8 @@ def main():
 
     from repro.core import (ChainDriver, DecisionJournal, EnvConfig,
                             ProvisionEnv, ReplayCheckpointCache,
-                            VectorProvisionEnv, build_policy, evaluate_batch)
+                            build_policy, evaluate_batch)
+    from repro.sim.scenarios import make_vector_env
     from repro.core.provisioner import collect_offline_samples
     from repro.sim import get_fault_spec, synthesize_trace, split_trace
     from repro.sim.trace import PROFILES
@@ -93,8 +94,8 @@ def main():
                           history=args.history, reduced=True, seed=args.seed)
     print(f"[provision] trained {args.method} ({time.time()-t0:.0f}s)")
 
-    venv = VectorProvisionEnv(jobs, ecfg, args.episodes, seed=args.seed,
-                              cache=cache)
+    venv = make_vector_env(jobs, ecfg, args.episodes, seed=args.seed,
+                           cache=cache)
     res = evaluate_batch(venv, policy, seed=args.seed + 1)
     base = evaluate_batch(venv, build_policy("reactive", env_train),
                           seed=args.seed + 1)

@@ -2,7 +2,9 @@ from .cluster import Cluster  # noqa: F401
 from .faults import (FAULT_PROFILES, FaultPlan, FaultSpec,  # noqa: F401
                      get_fault_spec)
 from .scenarios import (CHAIN_SHAPES, LOAD_LEVELS, SCENARIOS,  # noqa: F401
-                        Scenario, get_scenario, iter_scenarios)
+                        Scenario, get_scenario, iter_scenarios,
+                        make_env, make_vector_env)
+from .timeline import BackgroundTimeline  # noqa: F401
 from .simulator import (SampleBatch, SlurmSimulator, replay,  # noqa: F401
                         sample_batch)
 from .trace import (PROFILES, ClusterProfile, Job, clean_trace,  # noqa: F401

@@ -97,11 +97,10 @@ class Scenario:
                  history: int = 144, interval: float = 600.0, cache=None,
                  trace: Optional[List[Job]] = None):
         """A scalar ProvisionEnv for this scenario (trace seeded ``seed``)."""
-        from repro.core import ProvisionEnv
         trace = trace if trace is not None else self.make_trace(months, seed)
         cfg = self.env_config(history, interval,
                               faults=self.make_fault_plan(trace, seed))
-        return ProvisionEnv(trace, cfg, seed=seed, cache=cache)
+        return make_env(trace, cfg, seed=seed, cache=cache)
 
     def make_vector_env(self, batch: int, months: Optional[int] = None,
                         seed: int = 0, history: int = 144,
@@ -110,11 +109,44 @@ class Scenario:
         """A B-lane VectorProvisionEnv for this scenario; pass ``cache=``
         to share one ReplayCheckpointCache across sweep cells that reuse
         the same trace (the cache must carry the same fault plan)."""
-        from repro.core import VectorProvisionEnv
         trace = trace if trace is not None else self.make_trace(months, seed)
         cfg = self.env_config(history, interval,
                               faults=self.make_fault_plan(trace, seed))
-        return VectorProvisionEnv(trace, cfg, batch, seed=seed, cache=cache)
+        return make_vector_env(trace, cfg, batch, seed=seed, cache=cache)
+
+
+def make_env(trace: List[Job], cfg, *, seed: int = 0, cache=None,
+             **overrides):
+    """THE constructor for scalar provisioning environments.
+
+    Every call site builds its ``ProvisionEnv`` here (or through
+    ``Scenario.make_env``, which delegates): the factory owns cache
+    attachment and keyword overrides (``**overrides`` are applied to
+    ``cfg`` via ``dataclasses.replace``), so experiment scripts stop
+    re-plumbing constructor arguments. Imports ``repro.core`` lazily to
+    keep ``repro.sim`` cycle-free."""
+    from repro.core import ProvisionEnv
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    return ProvisionEnv(trace, cfg, seed=seed, cache=cache)
+
+
+def make_vector_env(trace: List[Job], cfg, batch: int, *, seed: int = 0,
+                    cache=None, **overrides):
+    """THE constructor for vectorized provisioning environments.
+
+    Like ``make_env`` but returns a B-lane ``VectorProvisionEnv``; lane
+    ``i`` is bit-identical to ``make_env(trace, cfg, seed=seed + i)``.
+    Pass ``cache=`` to share one ``ReplayCheckpointCache`` (and its
+    immutable ``BackgroundTimeline``) across envs over the same trace;
+    without it the env builds and owns one. ``differential=False`` in
+    ``overrides`` forces the classic fork-per-lane reset path. For a
+    different batch size over the same wiring use
+    ``VectorProvisionEnv.resized(n)`` on the result."""
+    from repro.core import VectorProvisionEnv
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    return VectorProvisionEnv(trace, cfg, batch, seed=seed, cache=cache)
 
 
 def _build_registry() -> Dict[str, Scenario]:

@@ -48,6 +48,28 @@ _INF = float("inf")
 _EMPTY_I = np.empty(0, np.int64)
 
 
+@dataclasses.dataclass(frozen=True)
+class ScheduleView:
+    """Read-only snapshot view of a simulator's per-job schedule arrays.
+
+    Served by ``SlurmSimulator.schedule_view()`` — the one supported
+    cross-module read of schedule state (the ``BackgroundTimeline``
+    builder and the checkpoint cache's sizing are its consumers). All
+    arrays are length-``n`` truncated views with ``writeable=False``;
+    index ``i`` is the simulator's internal job index (``ids[i]`` maps
+    back to the external ``job_id``).
+    """
+    n: int                   # registered jobs
+    now: float               # simulated time of the snapshot
+    sub: np.ndarray          # (n,) submit times
+    runtime: np.ndarray      # (n,) actual runtimes
+    limit: np.ndarray        # (n,) wall-clock limits
+    nodes: np.ndarray        # (n,) node counts (int64)
+    ids: np.ndarray          # (n,) external job ids (int64)
+    start: np.ndarray        # (n,) start times (-1 = not started)
+    end: np.ndarray          # (n,) end times (-1 = not finished)
+
+
 class SlurmSimulator:
     def __init__(self, n_nodes: int, mode: str = "fast",
                  sched_interval: float = 300.0, backfill: bool = True,
@@ -114,6 +136,9 @@ class SlurmSimulator:
         self._noop_shadow = _INF
         self._noop_spare = 0
         self._noop_horizon = -_INF
+        # optional scheduling-pass recorder (repro.sim.timeline attaches
+        # one while building the immutable background timeline)
+        self._pass_rec = None
 
     # ------------------------------------------------------------- loading
     def _unshare(self) -> None:
@@ -127,8 +152,10 @@ class SlurmSimulator:
         self._lim = self._lim.copy()
         self._nn = self._nn.copy()
         self._ids = self._ids.copy()
+        prune = len(self._jobs) > n      # parent registered past our fork
         self._jobs = list(self._jobs[:n])
-        self._by_id = {k: v for k, v in self._by_id.items() if v < n}
+        self._by_id = ({k: v for k, v in self._by_id.items() if v < n}
+                       if prune else dict(self._by_id))
         self._shared_store = False
 
     def _register(self, job: Job) -> int:
@@ -223,17 +250,34 @@ class SlurmSimulator:
         return min(self._next_arrival(), self._next_completion(), self._nf)
 
     def _queue_prio(self, idx: np.ndarray) -> np.ndarray:
-        """Multifactor priority (age + size) at the current instant."""
-        nav = max(self.cluster.n_available, 1)
-        return (AGE_WEIGHT * np.minimum((self.now - self._sub[idx])
-                                        / AGE_MAX, 1.0)
-                + SIZE_WEIGHT * self._nn[idx] / nav)
+        """Multifactor priority (age + size) at the current instant.
+
+        In-place evaluation of
+        ``AGE_WEIGHT * min((now - sub) / AGE_MAX, 1) + SIZE_WEIGHT * nn / nav``
+        — elementwise op order is unchanged, so results stay bit-exact."""
+        cl = self.cluster
+        nav = max(cl.n_nodes - cl.down_nodes, 1)
+        a = self.now - self._sub[idx]
+        a /= AGE_MAX
+        np.minimum(a, 1.0, out=a)
+        a *= AGE_WEIGHT
+        b = SIZE_WEIGHT * self._nn[idx]
+        b /= nav
+        a += b
+        return a
+
+    def _prio_one(self, h: int, nav: int) -> float:
+        """Scalar ``_queue_prio`` for a single index: identical IEEE
+        double operations without the array round-trip."""
+        return (AGE_WEIGHT * min((self.now - float(self._sub[h])) / AGE_MAX,
+                                 1.0)
+                + SIZE_WEIGHT * float(self._nn[h]) / nav)
 
     def _absorb_events(self, t: float) -> None:
         """Process every arrival/completion with time <= t (no scheduling)."""
         # arrivals -> queue (append; order fixed by the next schedule pass)
         p = self._arr_ptr
-        e = int(np.searchsorted(self._arr_t, t, side="right"))
+        e = int(self._arr_t.searchsorted(t, side="right"))
         if e > p:
             self._q = np.concatenate([self._q, self._arr_i[p:e]])
             self._arr_ptr = e
@@ -241,18 +285,21 @@ class SlurmSimulator:
         rn = self._run_n
         if rn and self._next_comp <= t:
             self._noop_free = -1             # free nodes change
-            done = self._run_end[:rn] <= t
+            ends = self._run_end[:rn]
+            done = ends <= t
             ids = self._run_i[:rn][done]
             self.cluster.release_n(int(self._nn[ids].sum()))
+            # _run_end mirrors _end for running ids: same max, one gather.
+            # Copied before the in-place compaction below clobbers `ends`.
+            mk = float(ends[done].max())
             keep = ~done
             nk = int(keep.sum())
             self._run_i[:nk] = self._run_i[:rn][keep]
-            self._run_end[:nk] = self._run_end[:rn][keep]
+            self._run_end[:nk] = ends[keep]
             self._run_n = nk
             self._next_comp = (float(self._run_end[:nk].min()) if nk
                                else _INF)
             self._fin.extend(ids.tolist())
-            mk = float(self._end[ids].max())
             if mk > self._makespan:
                 self._makespan = mk
         # faults last: a job ending exactly at the fault instant completes
@@ -364,8 +411,13 @@ class SlurmSimulator:
         """
         t = max(t, self.now)
         exact = self.mode == "exact"
+        arr_t = self._arr_t
+        arr_size = arr_t.size
         while True:
-            tn = self._next_event_time()
+            # inlined _next_event_time: this loop body runs once per event
+            p = self._arr_ptr
+            tn = min(arr_t[p] if p < arr_size else _INF,
+                     self._next_comp, self._nf)
             if exact and self._next_sched <= t and self._next_sched < tn:
                 self.now = self._next_sched
                 self._schedule()
@@ -460,6 +512,29 @@ class SlurmSimulator:
                                f"free {self.cluster.n_free}")
         self.cluster.allocate_n(total)
         now = self.now
+        if ids.size == 1:
+            # scalar fast path for the common one-job start: identical
+            # IEEE arithmetic, no array temporaries
+            i0 = int(ids[0])
+            rt, lm = self._rt[i0], self._lim[i0]
+            end = float(now + (rt if rt < lm else lm))
+            self._start[i0] = now
+            self._end[i0] = end
+            rn = self._run_n
+            if rn + 1 > self._run_i.size:
+                cap = max(2 * self._run_i.size, rn + 1)
+                self._run_i = np.resize(self._run_i, cap)
+                self._run_end = np.resize(self._run_end, cap)
+            self._run_i[rn] = i0
+            self._run_end[rn] = end
+            self._run_n = rn + 1
+            if end < self._next_comp:
+                self._next_comp = end
+            if not self._forked or i0 in self._tracked:
+                j = self._jobs[i0]
+                j.start_time = now
+                j.end_time = end
+            return
         ends = now + np.minimum(self._rt[ids], self._lim[ids])
         self._start[ids] = now
         self._end[ids] = ends
@@ -478,12 +553,18 @@ class SlurmSimulator:
         # write back to the boundary Job objects (forked sims only touch
         # jobs submitted after the fork -- shared trace refs stay pristine)
         jobs, tracked = self._jobs, self._tracked
-        for k, i in enumerate(ids):
-            i = int(i)
-            if not self._forked or i in tracked:
-                j = jobs[i]
+        if not self._forked:
+            for k, i in enumerate(ids):
+                j = jobs[int(i)]
                 j.start_time = now
                 j.end_time = float(ends[k])
+        elif tracked:
+            for k, i in enumerate(ids):
+                i = int(i)
+                if i in tracked:
+                    j = jobs[i]
+                    j.start_time = now
+                    j.end_time = float(ends[k])
 
     def _noop_still_blocked(self, new: np.ndarray, free: int) -> bool:
         """True iff the queued-since-the-cached-pass arrivals provably
@@ -502,8 +583,9 @@ class SlurmSimulator:
             if (nn[fits] <= self._noop_spare).any():
                 return False
         h = self._noop_head
-        nav = max(self.cluster.n_available, 1)
-        prio_h = float(self._queue_prio(np.array([h], np.int64))[0])
+        cl = self.cluster
+        nav = max(cl.n_nodes - cl.down_nodes, 1)
+        prio_h = self._prio_one(h, nav)
         prio_n = self._queue_prio(new)
         if (prio_n > prio_h).any():
             return False
@@ -549,7 +631,8 @@ class SlurmSimulator:
         unsat = self.now - sub_q < AGE_MAX
         horizon = float(sub_q[unsat].min() + AGE_MAX) if unsat.any() else _INF
         if self.now - self._sub[h] >= AGE_MAX and unsat.any():
-            nav = max(self.cluster.n_available, 1)
+            cl = self.cluster
+            nav = max(cl.n_nodes - cl.down_nodes, 1)
             tx = (sub_q[unsat] + AGE_MAX
                   + (SIZE_WEIGHT * AGE_MAX / (AGE_WEIGHT * nav))
                   * (self._nn[h] - self._nn[q][unsat]))
@@ -570,8 +653,9 @@ class SlurmSimulator:
             if (nn[fits] <= self._noop_spare).any():
                 return False
         h = self._noop_head
-        nav = max(self.cluster.n_available, 1)
-        prio_h = float(self._queue_prio(np.array([h], np.int64))[0])
+        cl = self.cluster
+        nav = max(cl.n_nodes - cl.down_nodes, 1)
+        prio_h = self._prio_one(h, nav)
         if (SIZE_WEIGHT * nn / nav > prio_h).any():
             return False
         if self.now - self._sub[h] >= AGE_MAX:
@@ -592,14 +676,20 @@ class SlurmSimulator:
     def _schedule(self) -> None:
         """Priority order + EASY backfill with one head-of-line reservation."""
         self._sched_passes += 1
+        rec = self._pass_rec
         q = self._q
         if not q.size:
+            if rec is not None:
+                rec.empty(self)
             return
         # nothing can start with zero free nodes; the queue order is
         # recomputed on every pass, so skipping the sort here is safe
-        if self.cluster.n_free == 0:
+        cl = self.cluster
+        free = cl.n_nodes - cl.down_nodes - cl._busy      # n_free, inlined
+        if free == 0:
+            if rec is not None:
+                rec.free0(self)
             return
-        free = self.cluster.n_free
         # no-op fast path: same free nodes, priority order still valid,
         # and no newcomer can start or displace the cached head
         if self._noop_free == free and q.size >= self._noop_qlen:
@@ -610,45 +700,63 @@ class SlurmSimulator:
                 self._noop_qlen = q.size
                 return
         self._noop_free = -1
+        free_entry = free
         # vectorized multifactor priority, ordered by (-prio, submit, id)
-        q = q[np.lexsort((self._ids[q], self._sub[q], -self._queue_prio(q)))]
+        key = self._queue_prio(q)
+        np.negative(key, out=key)
+        q = q[np.lexsort((self._ids[q], self._sub[q], key))]
         # start in priority order until the head doesn't fit
-        csum = np.cumsum(self._nn[q])
-        k = int(np.searchsorted(csum, free, side="right"))
+        nn_q = self._nn[q]
+        csum = nn_q.cumsum()
+        k = int(csum.searchsorted(free, side="right"))
+        prefix = q[:k] if k else _EMPTY_I
         if k:
-            self._start_batch(q[:k])
+            self._start_batch(prefix)
             q = q[k:]
+            nn_q = nn_q[k:]
         if not q.size:
             self._q = q
+            if rec is not None:
+                rec.full(self, free_entry, prefix, _EMPTY_I, -1,
+                         self.cluster.n_free, _INF, 0)
             return
         if not self.backfill:
             self._q = q
             # blocked head, no backfill: arrivals can only start by
             # outranking-and-fitting, which the noop check covers
             self._record_noop(q, self.cluster.n_free, -_INF, -1)
+            if rec is not None:
+                rec.full(self, free_entry, prefix, _EMPTY_I, int(q[0]),
+                         self.cluster.n_free, -_INF, -1)
             return
-        free = self.cluster.n_free
+        free = cl.n_nodes - cl.down_nodes - cl._busy      # post-prefix free
         if free == 0:
             # the priority prefix consumed every node: no backfill and
             # nothing to cache (the free==0 exits above handle probes)
             self._q = q
+            if rec is not None:
+                rec.full(self, free_entry, prefix, _EMPTY_I, int(q[0]),
+                         0, -_INF, -1)
             return
         cand = q[1:]
-        n = self._nn[cand]
+        n = nn_q[1:]
         if not cand.size or not (n <= free).any():
             # nothing can backfill regardless of the reservation; record
             # with an open shadow so any fitting arrival forces a full pass
             self._q = q
             self._record_noop(q, free, _INF, 0)
+            if rec is not None:
+                rec.full(self, free_entry, prefix, _EMPTY_I, int(q[0]),
+                         free, _INF, 0)
             return
         # reservation for the blocked head based on running jobs' LIMITS
-        head_n = int(self._nn[q[0]])
+        head_n = int(nn_q[0])
         rn = self._run_n
         run = self._run_i[:rn]
         run_nn = self._nn[run]
         order = np.lexsort((run_nn, self._start[run] + self._lim[run]))
-        avail = free + np.cumsum(run_nn[order])
-        pos = int(np.searchsorted(avail, head_n, side="left"))
+        avail = free + run_nn[order].cumsum()
+        pos = int(avail.searchsorted(head_n, side="left"))
         if pos < rn:
             r = run[order[pos]]
             shadow_time = float(self._start[r] + self._lim[r])
@@ -662,11 +770,15 @@ class SlurmSimulator:
         # The sequential scan only visits candidates that pass the
         # vectorized fit/time pre-filter, and stops once nodes run out.
         ends_ok = self.now + self._lim[cand] <= shadow_time
-        viable = np.flatnonzero((n <= free) & (ends_ok | (n <= spare)))
+        viable = ((n <= free) & (ends_ok | (n <= spare))).nonzero()[0]
         if not viable.size:
             self._q = q
             self._record_noop(q, free, shadow_time, spare)
+            if rec is not None:
+                rec.full(self, free_entry, prefix, _EMPTY_I, int(q[0]),
+                         free, shadow_time, spare)
             return
+        free_bf, spare_bf = free, spare
         started_mask = np.zeros(cand.size, bool)
         for k in viable:
             nk = int(n[k])
@@ -684,11 +796,104 @@ class SlurmSimulator:
         if started_mask.any():
             self._start_batch(cand[started_mask])
             self._q = np.concatenate([q[:1], cand[~started_mask]])
+            if rec is not None:
+                rec.full(self, free_entry, prefix, cand[started_mask],
+                         int(q[0]), free_bf, shadow_time, spare_bf)
         else:
             self._q = q
             self._record_noop(q, free, shadow_time, spare)
+            if rec is not None:
+                rec.full(self, free_entry, prefix, _EMPTY_I, int(q[0]),
+                         free, shadow_time, spare)
 
     # --------------------------------------------------- boundary views
+    def schedule_view(self) -> "ScheduleView":
+        """Documented read-only view of the per-job schedule arrays.
+
+        The returned arrays are truncated to the registered-job count and
+        marked non-writeable (the underlying SoA buffers stay private to
+        the simulator — this is the CoW sanitizer's freeze applied at the
+        API boundary, unconditionally). This is the ONLY supported
+        cross-module read of the schedule state; external pokes at
+        ``_sub``/``_start``/... are deprecated (see ``fork_nbytes`` for
+        the checkpoint-cache sizing that used to read privates).
+        """
+        n = self._n
+        view = ScheduleView(
+            n=n, now=self.now,
+            sub=self._sub[:n], runtime=self._rt[:n], limit=self._lim[:n],
+            nodes=self._nn[:n], ids=self._ids[:n],
+            start=self._start[:n], end=self._end[:n])
+        for a in (view.sub, view.runtime, view.limit, view.nodes,
+                  view.ids, view.start, view.end):
+            a.flags.writeable = False
+        return view
+
+    def fork_nbytes(self) -> int:
+        """Marginal memory of one ``fork()`` of this simulator: the state
+        copied eagerly (start/end, running arrays, finished list) — the
+        job-store arrays are shared copy-on-write and amortize across all
+        forks of one base."""
+        return (self._start.nbytes + self._end.nbytes + self._run_i.nbytes
+                + self._run_end.nbytes + 8 * len(self._fin) + 2048)
+
+    # ------------------------------------------- differential adoption
+    def adopt_running(self, job: Job, start_time: float, pass_pos: int,
+                      pass_size: int) -> None:
+        """Graft ``job`` into the running set as if the scheduling pass at
+        ``start_time`` (== ``now``) had started it at position
+        ``pass_pos`` of its ``pass_size`` starts.
+
+        Used by the differential episode engine after it proves, against
+        the immutable background timeline, that the injected job starts at
+        exactly this instant without perturbing any background decision:
+        the background fork already holds the pass's other
+        ``pass_size - 1`` starts at the tail of the running arrays, so the
+        job is registered and spliced in at the slot the real interleaved
+        pass would have given it (running-array order is observable via
+        ``sample()``'s elapsed/size vectors). ``job.submit_time`` is
+        preserved un-clamped — its queue-age history predates this fork.
+        """
+        i = self._register(job)
+        self._tracked.add(i)
+        end = start_time + min(job.runtime, job.time_limit)
+        self._start[i] = start_time
+        self._end[i] = end
+        rn = self._run_n
+        need = rn + 1
+        if need > self._run_i.size:
+            cap = max(2 * self._run_i.size, need)
+            self._run_i = np.resize(self._run_i, cap)
+            self._run_end = np.resize(self._run_end, cap)
+        slot = rn - (pass_size - 1) + pass_pos
+        assert 0 <= slot <= rn, (slot, rn, pass_pos, pass_size)
+        self._run_i[slot + 1:need] = self._run_i[slot:rn].copy()
+        self._run_end[slot + 1:need] = self._run_end[slot:rn].copy()
+        self._run_i[slot] = i
+        self._run_end[slot] = end
+        self._run_n = need
+        self.cluster.allocate_n(job.n_nodes)
+        if end < self._next_comp:
+            self._next_comp = end
+        job.start_time = start_time
+        job.end_time = end
+        self._noop_free = -1
+
+    def adopt_queued(self, job: Job, run_pass: bool = False) -> None:
+        """Graft ``job`` into the wait queue with its original (possibly
+        past) submit time — unlike ``submit()`` there is no clamp to
+        ``now``, so the job's accumulated age priority survives the
+        adoption. With ``run_pass`` a scheduling pass runs immediately,
+        reproducing the pass the job's own submission event would have
+        triggered (the differential engine's cascade path at the episode
+        start instant)."""
+        i = self._register(job)
+        self._tracked.add(i)
+        self._q = np.concatenate([self._q, np.array([i], np.int64)])
+        self._noop_free = -1
+        if run_pass:
+            self._schedule()
+
     def _job_view(self, i: int) -> Job:
         j = self._jobs[i]
         if self._forked and i not in self._tracked:
@@ -780,6 +985,7 @@ class SlurmSimulator:
         s._noop_shadow = _INF
         s._noop_spare = 0
         s._noop_horizon = -_INF
+        s._pass_rec = None          # recorders never follow a fork
         if _cow.enabled():
             # CoW aliasing sanitizer: freeze the shared arrays (both
             # endpoints alias the same objects) so any in-place mutation

@@ -110,12 +110,20 @@ def test_cache_eviction_under_memory_bound(trace_cfg):
                        run_episode(venv_t, ts2, policy))
 
 
-def test_noop_schedule_cache_equivalence():
+@pytest.mark.parametrize("fault", ["", "faulty"])
+def test_noop_schedule_cache_equivalence(fault):
     """The no-op scheduling cache and the arrival fast-forward must not
     change any scheduling decision: start/end times over a heavy month
-    match a reference engine with both optimizations disabled."""
+    match a reference engine with both optimizations disabled — on the
+    fault-free cell AND under a registered fault profile's kills/requeues
+    (the ROADMAP asks for the faulted cells whenever _schedule moves)."""
     jobs = synthesize_trace(V100, months=1, seed=3, load_scale=1.0)
-    opt = replay(jobs, V100.n_nodes, mode="fast")
+    plan = None
+    if fault:
+        from repro.sim import get_fault_spec
+        plan = get_fault_spec(fault).make_plan(
+            jobs[-1].submit_time + 3 * 24 * HOUR, V100.n_nodes, seed=11)
+    opt = replay(jobs, V100.n_nodes, mode="fast", faults=plan)
     res_opt = [(j.job_id, j.start_time, j.end_time) for j in opt.finished]
 
     rec = sim_mod.SlurmSimulator._record_noop
@@ -149,7 +157,7 @@ def test_noop_schedule_cache_equivalence():
 
     sim_mod.SlurmSimulator.run_until = run_until_ref
     try:
-        ref = replay(jobs, V100.n_nodes, mode="fast")
+        ref = replay(jobs, V100.n_nodes, mode="fast", faults=plan)
     finally:
         sim_mod.SlurmSimulator.run_until = ru
         sim_mod.SlurmSimulator._record_noop = rec

@@ -1,0 +1,219 @@
+"""Differential episode engine: the immutable ``BackgroundTimeline``
+must serve resets start/end-**bit-identically** to the classic
+fork-per-lane path — on fault-free and faulted cells, on proved-start
+lanes and on provable-cascade fallback lanes alike — and the new API
+surface (``make_env``/``make_vector_env`` factories, ``schedule_view``,
+``resized``) must uphold its contracts.
+"""
+import copy
+import warnings
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import EnvConfig, ProvisionEnv
+from repro.core.provisioner import ReplayCheckpointCache, _sim_nbytes
+from repro.sim import (FaultPlan, SlurmSimulator, get_fault_spec, make_env,
+                       make_vector_env, synthesize_trace)
+from repro.sim.faults import FAIL, REPAIR
+from repro.sim.trace import V100
+
+HOUR = 3600.0
+DAY = 24 * HOUR
+
+
+@pytest.fixture(scope="module")
+def trace_cfg():
+    jobs = synthesize_trace(V100, months=1, seed=5, load_scale=1.0)
+    return jobs, EnvConfig(n_nodes=V100.n_nodes, history=12, interval=1800.0)
+
+
+def run_episode(venv, t_starts, policy):
+    obs = venv.reset(t_starts=t_starts)
+    traj = [{k: np.array(v) for k, v in obs.items()}]
+    rewards, infos = np.zeros(venv.batch), [{}] * venv.batch
+    t = 0
+    while not venv.dones.all():
+        was = venv.dones.copy()
+        obs, r, dones, inf = venv.step([policy(t)] * venv.batch)
+        traj.append({k: np.array(v) for k, v in obs.items()})
+        for i in range(venv.batch):
+            if not was[i] and dones[i]:
+                rewards[i] = r[i]
+                infos[i] = inf[i]
+        t += 1
+    return traj, rewards, infos
+
+
+def assert_trajs_equal(a, b):
+    ta, ra, ia = a
+    tb, rb, ib = b
+    assert len(ta) == len(tb)
+    for sa, sb in zip(ta, tb):
+        for k in sa:
+            np.testing.assert_array_equal(sa[k], sb[k], err_msg=k)
+    np.testing.assert_array_equal(ra, rb)
+    assert ia == ib
+
+
+def _pred_times(venv):
+    """(start, end) per lane after a reset — the episode's ground truth."""
+    return [(e.pred.start_time, e.pred.end_time) for e in venv.envs]
+
+
+# --------------------------------------------------- differential == fork
+def test_differential_engine_bit_identical_fault_free(trace_cfg):
+    """Full-trajectory equality: the differential reset (timeline place +
+    adopt) and the classic fork-per-lane reset produce bit-identical
+    observations, rewards and infos — and the engine actually engaged."""
+    jobs, cfg = trace_cfg
+    B = 4
+    lo, hi = ProvisionEnv(jobs, cfg, seed=0)._t_start_range
+    ts = [lo + f * (hi - lo) for f in (0.1, 0.35, 0.6, 0.85)]
+    policy = (lambda t: 1 if t >= 3 else 0)
+
+    venv_d = make_vector_env(jobs, cfg, B, seed=0)
+    venv_f = make_vector_env(jobs, cfg, B, seed=0, differential=False)
+    a = run_episode(venv_d, ts, policy)
+    b = run_episode(venv_f, ts, policy)
+    # the engine served every lane (fault-free: timeline covers the trace)
+    assert venv_d.reset_stats["diff_lanes"] == B
+    assert venv_d.reset_stats["fallback_lanes"] == 0
+    assert venv_f.reset_stats["diff_lanes"] == 0
+    assert 0.0 < venv_d.differential_hit_rate <= 1.0
+    assert _pred_times(venv_d) == _pred_times(venv_f)
+    assert_trajs_equal(a, b)
+
+
+def test_differential_covers_both_placement_kinds(trace_cfg):
+    """Across a spread of start instants on a heavy-load month, the
+    engine exercises BOTH materialization paths — proved-inert starts and
+    provable-cascade fallbacks — and every lane still matches the
+    full-fork engine start/end-exactly."""
+    jobs, cfg = trace_cfg
+    B = 8
+    lo, hi = ProvisionEnv(jobs, cfg, seed=0)._t_start_range
+    ts = [lo + (i + 0.5) / B * (hi - lo) for i in range(B)]
+    venv_d = make_vector_env(jobs, cfg, B, seed=0)
+    venv_f = make_vector_env(jobs, cfg, B, seed=0, differential=False)
+    venv_d.reset(t_starts=ts)
+    venv_f.reset(t_starts=ts)
+    st_ = venv_d.reset_stats
+    assert st_["starts"] + st_["cascades"] == B
+    assert st_["cascades"] > 0     # heavy load: displacements do occur
+    assert _pred_times(venv_d) == _pred_times(venv_f)
+
+
+def test_differential_faulted_lanes_fall_back(trace_cfg):
+    """On a faulted cell the timeline is only the truth before the first
+    fault event: lanes past ``valid_until`` must fall back to real forks,
+    lanes before it may stay differential — and both populations must be
+    bit-identical to the fork-only engine."""
+    jobs, cfg_ff = trace_cfg
+    lo, hi = ProvisionEnv(jobs, cfg_ff, seed=0)._t_start_range
+    # one mid-trace fail/repair pair: early lanes differential, late
+    # lanes (after the fault) forced onto the fork path
+    t_fault = lo + 0.5 * (hi - lo)
+    plan = FaultPlan(np.array([t_fault, t_fault + 6 * HOUR]),
+                     np.array([FAIL, REPAIR]), np.array([4, 4]))
+    cfg = EnvConfig(n_nodes=cfg_ff.n_nodes, history=cfg_ff.history,
+                    interval=cfg_ff.interval, faults=plan)
+    ts = [lo + 0.1 * (hi - lo), lo + 0.8 * (hi - lo)]
+    policy = (lambda t: 1 if t >= 3 else 0)
+    venv_d = make_vector_env(jobs, cfg, 2, seed=0)
+    venv_f = make_vector_env(jobs, cfg, 2, seed=0, differential=False)
+    a = run_episode(venv_d, ts, policy)
+    b = run_episode(venv_f, ts, policy)
+    assert venv_d.reset_stats["diff_lanes"] == 1       # pre-fault lane
+    assert venv_d.reset_stats["fallback_lanes"] == 1   # post-fault lane
+    assert _pred_times(venv_d) == _pred_times(venv_f)
+    assert_trajs_equal(a, b)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(min_value=0, max_value=10**6),
+       st.lists(st.floats(min_value=0.02, max_value=0.98),
+                min_size=2, max_size=3))
+def test_differential_matches_fork_under_faults_property(seed, fracs):
+    """Property: for any fault plan drawn from the registered profile and
+    any episode start instants, differential and full-fork resets agree
+    on every predecessor start/end — including lanes whose episodes
+    straddle kills/requeues and lanes past ``valid_until``."""
+    jobs = synthesize_trace(V100, months=1, seed=5, load_scale=1.0)
+    plan = get_fault_spec("faulty").make_plan(
+        jobs[-1].submit_time + 3 * DAY, V100.n_nodes, seed=seed)
+    cfg = EnvConfig(n_nodes=V100.n_nodes, history=12, interval=1800.0,
+                    faults=plan)
+    lo, hi = ProvisionEnv(jobs, cfg, seed=0)._t_start_range
+    ts = [lo + f * (hi - lo) for f in fracs]
+    venv_d = make_vector_env(jobs, cfg, len(ts), seed=seed % 97)
+    venv_f = make_vector_env(jobs, cfg, len(ts), seed=seed % 97,
+                             differential=False)
+    venv_d.reset(t_starts=ts)
+    venv_f.reset(t_starts=ts)
+    assert _pred_times(venv_d) == _pred_times(venv_f)
+
+
+# ------------------------------------------------------------ API surface
+def test_schedule_view_read_only(trace_cfg):
+    """``schedule_view()`` is the one supported cross-module read: its
+    arrays mirror the schedule exactly and are frozen unconditionally
+    (no sanitizer needed) — writes raise at the write site."""
+    jobs, cfg = trace_cfg
+    sim = SlurmSimulator(cfg.n_nodes, mode="fast")
+    sim.load([copy.copy(j) for j in jobs])
+    sim.run_until(jobs[0].submit_time + 5 * DAY)
+    view = sim.schedule_view()
+    assert view.n == sim._n and view.now == sim.now
+    np.testing.assert_array_equal(view.start, sim._start[:sim._n])
+    np.testing.assert_array_equal(view.end, sim._end[:sim._n])
+    np.testing.assert_array_equal(view.ids, sim._ids[:sim._n])
+    for name in ("sub", "runtime", "limit", "nodes", "ids", "start", "end"):
+        arr = getattr(view, name)
+        assert not arr.flags.writeable, name
+        with pytest.raises(ValueError):
+            arr[0] = 0
+    # the freeze is a view property: the simulator's own buffers stay
+    # writeable (freezing them would break the engine itself)
+    assert sim._start.flags.writeable
+
+
+def test_sim_nbytes_deprecation_shim(trace_cfg):
+    """The one-release shim for the retired private-array read: warns,
+    and returns exactly what the supported accessor reports."""
+    jobs, cfg = trace_cfg
+    sim = SlurmSimulator(cfg.n_nodes, mode="fast")
+    sim.load([copy.copy(j) for j in jobs])
+    with pytest.warns(DeprecationWarning):
+        n = _sim_nbytes(sim)
+    assert n == sim.fork_nbytes()
+
+
+def test_factory_overrides_do_not_mutate_cfg(trace_cfg):
+    jobs, cfg = trace_cfg
+    venv = make_vector_env(jobs, cfg, 1, seed=0, differential=False)
+    assert venv.cfg.differential is False
+    assert cfg.differential is True            # replace(), not mutation
+    env = make_env(jobs, cfg, seed=3, history=7)
+    assert env.cfg.history == 7 and cfg.history != 7
+    assert isinstance(env, ProvisionEnv)
+
+
+def test_factory_lane_identity_and_resized(trace_cfg):
+    """Factory-built lane i == factory-built scalar seeded seed+i, and
+    ``resized`` shares trace/cfg/seed/cache (same object) so tail chunks
+    reuse the warm ring."""
+    jobs, cfg = trace_cfg
+    cache = ReplayCheckpointCache(jobs, cfg.n_nodes)
+    venv = make_vector_env(jobs, cfg, 2, seed=11, cache=cache)
+    assert venv.cache is cache
+    small = venv.resized(1)
+    assert small.batch == 1 and small.cache is cache
+    assert small.trace is venv.trace and small.cfg is venv.cfg
+    assert venv.resized(2) is venv             # no-op resize: same object
+    lo, hi = venv._t_start_range
+    ts = lo + 0.4 * (hi - lo)
+    vobs = venv.reset(t_starts=[ts, ts])
+    sobs = make_env(jobs, cfg, seed=12, cache=cache).reset(t_start=ts)
+    np.testing.assert_allclose(vobs["matrix"][1], sobs["matrix"], atol=1e-7)
