@@ -17,9 +17,10 @@ from typing import Dict
 
 import numpy as np
 
-from repro.core import (DQNConfig, DQNLearner, EnvConfig, FoundationConfig,
-                        MiragePolicy, PGConfig, PGLearner,
-                        ReplayCheckpointCache, TreePolicy, evaluate_batch)
+from repro.core import (AvgWaitPolicy, DQNConfig, DQNLearner, EnvConfig,
+                        FoundationConfig, LearnerPolicy, PGConfig, PGLearner,
+                        Policy, ReactivePolicy, ReplayCheckpointCache,
+                        TreePolicy, evaluate_batch)
 from repro.core.agent import ALL_METHODS
 from repro.core.trees import GradientBoosting, RandomForest
 from repro.sim import get_scenario, make_vector_env
@@ -33,21 +34,21 @@ HISTORY = 12
 INTERVAL = 1800.0
 
 
-def _grid_policies(history: int, seed: int = 0) -> Dict[str, MiragePolicy]:
+def _grid_policies(history: int, seed: int = 0) -> Dict[str, Policy]:
     """All eight methods, training-free: trees fit on random summary
     blocks, learners init-only (reduced trunks)."""
     rng = np.random.default_rng(seed)
     X = rng.normal(size=(64, 4 * 40)).astype(np.float32)
     y = np.abs(rng.normal(size=64)) * 3600.0
-    policies: Dict[str, MiragePolicy] = {
-        "reactive": MiragePolicy("reactive"),
-        "avg": MiragePolicy("avg"),
+    policies: Dict[str, Policy] = {
+        "reactive": ReactivePolicy(),
+        "avg": AvgWaitPolicy(),
     }
-    policies["avg"].avg.waits = list(y[:8])
+    policies["avg"].waits = list(y[:8])
     for m, model in (("random_forest", RandomForest(n_trees=5, seed=seed)),
                      ("xgboost", GradientBoosting(n_rounds=10, seed=seed))):
         model.fit(X, y)
-        policies[m] = MiragePolicy(m, tree=TreePolicy(model, m))
+        policies[m] = TreePolicy(model, m)
     for m in ("transformer+dqn", "transformer+pg", "moe+dqn", "moe+pg"):
         kind = "moe" if m.startswith("moe") else "transformer"
         fc = dataclasses.replace(FoundationConfig(kind=kind).reduced(),
@@ -55,7 +56,7 @@ def _grid_policies(history: int, seed: int = 0) -> Dict[str, MiragePolicy]:
         learner = (DQNLearner(fc, DQNConfig(), seed=seed)
                    if m.endswith("dqn") else
                    PGLearner(fc, PGConfig(), seed=seed))
-        policies[m] = MiragePolicy(m, learner=learner)
+        policies[m] = LearnerPolicy(m, learner)
     return policies
 
 
@@ -63,7 +64,7 @@ def bench_eval_throughput(batch: int = EVAL_BATCH):
     sc = get_scenario("V100", "medium", "single")
     jobs = sc.make_trace(months=BENCH_MONTHS, seed=11)
     policies = _grid_policies(HISTORY)
-    avg_warm = policies["avg"].avg.waits     # snapshot before any eval runs
+    avg_warm = policies["avg"].waits         # snapshot before any eval runs
     cfg = sc.env_config(history=HISTORY, interval=INTERVAL)
 
     cache = ReplayCheckpointCache(jobs, sc.profile.n_nodes)
@@ -93,7 +94,7 @@ def bench_eval_throughput(batch: int = EVAL_BATCH):
     # pre-protocol evaluate() cost per episode. The avg window is
     # restored to its warm snapshot so both timed sides run the same
     # policy state (the batched pass observed 32 waits).
-    policies["avg"].avg.waits = avg_warm
+    policies["avg"].waits = avg_warm
     t_scalar_total = 0.0
     for m in ALL_METHODS:
         venv1 = make_vector_env(jobs, cfg, 1, seed=0,

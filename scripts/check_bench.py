@@ -55,6 +55,11 @@ TRACKED = {
                     "degraded_decisions_per_s": "up",
                     "p99_latency_ms": "down"},
     },
+    "serve_decisions_cosim": {
+        "suite": "serve decisions",
+        "metrics": {"decisions_per_s": "up",
+                    "p99_latency_ms": "down"},
+    },
 }
 
 BASELINE_DIR = ROOT / "experiments" / "bench"

@@ -31,6 +31,7 @@ from .base import Finding, Pass, call_kwarg_names, dotted_name, numpy_aliases
 #: float64 compute contract (encoder/simulator path)
 FLOAT64_MODULES = (
     "repro/sim/simulator.py",
+    "repro/sim/multitenant.py",
     "repro/core/state.py",
     "repro/core/provisioner.py",
 )

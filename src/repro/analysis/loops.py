@@ -26,6 +26,7 @@ from .base import Finding, Pass
 HOT_MODULES = (
     "repro/sim/simulator.py",
     "repro/sim/timeline.py",
+    "repro/sim/multitenant.py",
     "repro/core/state.py",
     "repro/core/policy.py",
     "repro/core/provisioner.py",

@@ -1,8 +1,7 @@
 """Mirage core: the paper's contribution — RL-based proactive provisioning."""
 from .agent import (ALL_METHODS, DEFAULT_METHOD, EvalResult,  # noqa: F401
-                    LearnerPolicy, MiragePolicy, build_policy,
-                    evaluate_batch, pretrain_foundation, train_online_dqn,
-                    train_online_pg)
+                    LearnerPolicy, build_policy, evaluate_batch,
+                    pretrain_foundation, train_online_dqn, train_online_pg)
 from .baselines import (AvgWaitPolicy, ReactivePolicy,  # noqa: F401
                         TreePolicy)
 from .control import (ChainDriver, ChainLane, ChainResult,  # noqa: F401

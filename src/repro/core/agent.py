@@ -14,9 +14,11 @@ Every method is a ``Policy`` (repro.core.policy): ``act_batch`` over the
 vector env's batched obs dict, plus the ``reset_lanes`` / ``observe``
 hooks. ``evaluate_batch`` rolls B lockstep episodes off one shared
 ReplayCheckpointCache, and is the only evaluation entry point (the
-scalar ``evaluate`` shim and the pre-protocol ``act``-only adapter were
-retired after their one-release deprecation window; scalar callers run
-a B=1 ``VectorProvisionEnv`` through ``evaluate_batch`` instead). Under
+scalar ``evaluate`` shim, the pre-protocol ``act``-only adapter, and
+the ``MiragePolicy`` constructor shim were retired after their
+one-release deprecation windows; ``build_policy`` returns the concrete
+Policy classes, and scalar callers run a B=1 ``VectorProvisionEnv``
+through ``evaluate_batch`` instead). Under
 a faulted scenario it also reports per-lane fault/requeue counts and the
 policy's fallback count, so Fig-8/9 style grids can show every method's
 behaviour under failures.
@@ -30,7 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.sim.scenarios import make_vector_env
+from repro.sim.scenarios import make_co_vector_env, make_vector_env
 from repro.train.optimizer import OptimizerConfig, adamw_update, init_opt_state
 from .baselines import AvgWaitPolicy, ReactivePolicy, TreePolicy
 from .dqn import DQNConfig, DQNLearner
@@ -116,26 +118,46 @@ def _rollout_batch(venv: VectorProvisionEnv, act_batch) -> Tuple[
     return trajs, finals
 
 
+def _make_train_env(env: ProvisionEnv, b: int, tenants: int, seed: int,
+                    cache: ReplayCheckpointCache):
+    """The per-iteration rollout env: a B-lane vector env, or — with a
+    cross-tenant axis (``tenants > 1``) — a co-tenant env whose ``b``
+    episode groups each hold ``tenants`` contending chains, so the
+    policy trains against fleet-wide contention instead of per-chain
+    isolation. Lanes flatten to ``b * tenants`` either way, and the
+    rollout loop is axis-agnostic (a pending co-tenant lane records its
+    decision as a no-op transition, exactly as the env applied it)."""
+    if tenants <= 1:
+        return make_vector_env(env.trace, env.cfg, b, seed=seed,
+                               cache=cache)
+    return make_co_vector_env(env.trace, env.cfg, b, tenants, seed=seed,
+                              cache=cache)
+
+
 def train_online_dqn(env: ProvisionEnv, learner: DQNLearner,
                      episodes: int = 30, replay_capacity: int = 2048,
-                     seed: int = 0, batch: Optional[int] = None
-                     ) -> List[float]:
+                     seed: int = 0, batch: Optional[int] = None,
+                     tenants: int = 1) -> List[float]:
     """Online training on batched rollouts: B episodes share one
     background replay (VectorProvisionEnv) and one jitted forward per
     lockstep decision point; the replay fill and per-episode training
-    cadence match the scalar loop."""
+    cadence match the scalar loop. ``tenants > 1`` adds the cross-tenant
+    batch axis: every group of ``tenants`` consecutive episodes contends
+    in one shared simulator (``episodes`` counts finished chains, so one
+    co-sim group contributes ``tenants`` of them)."""
+    assert tenants >= 1 and episodes % max(tenants, 1) == 0, \
+        "episodes must be a multiple of the tenant count"
     buf = ReplayBuffer(replay_capacity, learner.fc.history, STATE_DIM, seed)
     returns: List[float] = []
-    B = batch or min(episodes, 8)
+    B = batch or min(episodes // tenants, 8)
     cache = env.cache or ReplayCheckpointCache(env.trace, env.cfg.n_nodes,
                                                faults=env.cfg.faults)
     while len(returns) < episodes:
-        b = min(B, episodes - len(returns))
-        venv = make_vector_env(env.trace, env.cfg, b,
-                               seed=seed + len(returns), cache=cache)
+        b = min(B, (episodes - len(returns)) // tenants)
+        venv = _make_train_env(env, b, tenants, seed + len(returns), cache)
         trajs, finals = _rollout_batch(
             venv, lambda m: learner.act_batch(m, explore=True))
-        for i in range(b):
+        for i in range(b * tenants):
             # Eq. 8: the outcome reward credits every action of the episode
             for (s, a, s2, d) in trajs[i]:
                 buf.add(s, a, finals[i], s2, d)
@@ -148,18 +170,23 @@ def train_online_dqn(env: ProvisionEnv, learner: DQNLearner,
 
 def train_online_pg(env: ProvisionEnv, learner: PGLearner,
                     episodes: int = 30, seed: int = 0,
-                    batch: Optional[int] = None) -> List[float]:
+                    batch: Optional[int] = None,
+                    tenants: int = 1) -> List[float]:
+    """On-policy training; ``tenants`` adds the same cross-tenant batch
+    axis as ``train_online_dqn`` (groups of contending chains in one
+    shared simulator)."""
+    assert tenants >= 1 and episodes % max(tenants, 1) == 0, \
+        "episodes must be a multiple of the tenant count"
     returns: List[float] = []
-    B = batch or min(episodes, 8)
+    B = batch or min(episodes // tenants, 8)
     cache = env.cache or ReplayCheckpointCache(env.trace, env.cfg.n_nodes,
                                                faults=env.cfg.faults)
     while len(returns) < episodes:
-        b = min(B, episodes - len(returns))
-        venv = make_vector_env(env.trace, env.cfg, b,
-                               seed=seed + len(returns), cache=cache)
+        b = min(B, (episodes - len(returns)) // tenants)
+        venv = _make_train_env(env, b, tenants, seed + len(returns), cache)
         trajs, finals = _rollout_batch(
             venv, lambda m: learner.act_batch(m, explore=True))
-        for i in range(b):
+        for i in range(b * tenants):
             states = np.stack([t[0] for t in trajs[i]])
             actions = np.asarray([t[1] for t in trajs[i]], np.int64)
             learner.train_on_episode(states, actions, float(finals[i]))
@@ -218,39 +245,8 @@ class LearnerPolicy(Policy):
                                       explore=False)
 
 
-class MiragePolicy(Policy):
-    """Deprecated constructor shim (one release): builds the right Policy
-    for ``method`` and delegates the protocol to it. Prefer the concrete
-    Policy classes (ReactivePolicy, AvgWaitPolicy, TreePolicy,
-    LearnerPolicy) or ``build_policy``."""
-
-    def __init__(self, method: str, learner=None, tree=None, avg=None):
-        self.method = method
-        self.learner = learner
-        self.tree = tree
-        self.avg = avg or AvgWaitPolicy()
-        self.reactive = ReactivePolicy()
-        if method == "reactive":
-            self._inner: Policy = self.reactive
-        elif method == "avg":
-            self._inner = self.avg
-        elif method in ("random_forest", "xgboost"):
-            self._inner = tree
-        else:
-            self._inner = LearnerPolicy(method, learner)
-
-    def act_batch(self, obs: Dict) -> np.ndarray:
-        return self._inner.act_batch(obs)
-
-    def reset_lanes(self, mask: np.ndarray) -> None:
-        self._inner.reset_lanes(mask)
-
-    def observe(self, infos: List[Optional[Dict]]) -> None:
-        self._inner.observe(infos)
-
-
 def _policy_method(policy) -> str:
-    return getattr(policy, "method", getattr(policy, "name", "policy"))
+    return getattr(policy, "method", "policy")
 
 
 def evaluate_batch(venv: VectorProvisionEnv, policy: Policy,
@@ -318,12 +314,14 @@ def build_policy(method: str, env: ProvisionEnv,
                  offline_samples: Optional[List[Dict]] = None,
                  online_episodes: int = 20, pretrain_epochs: int = 10,
                  history: int = 144, reduced: bool = False,
-                 seed: int = 0) -> MiragePolicy:
-    """Train (if needed) and wrap one of the eight methods."""
+                 seed: int = 0) -> Policy:
+    """Train (if needed) and build the concrete Policy for one of the
+    eight methods (ReactivePolicy / AvgWaitPolicy / TreePolicy /
+    LearnerPolicy)."""
     if method == "reactive":
-        return MiragePolicy(method)
+        return ReactivePolicy()
     if method == "avg":
-        return MiragePolicy(method)
+        return AvgWaitPolicy()
     assert offline_samples, f"{method} needs offline samples"
     if method in ("random_forest", "xgboost"):
         X = np.stack([s["summary"] for s in offline_samples])
@@ -331,7 +329,7 @@ def build_policy(method: str, env: ProvisionEnv,
         model = (RandomForest(n_trees=10, seed=seed) if method == "random_forest"
                  else GradientBoosting(n_rounds=25, seed=seed))
         model.fit(X, y)
-        return MiragePolicy(method, tree=TreePolicy(model, method))
+        return TreePolicy(model, method)
     kind = "moe" if method.startswith("moe") else "transformer"
     fc = FoundationConfig(kind=kind, history=history)
     if reduced:
@@ -345,4 +343,4 @@ def build_policy(method: str, env: ProvisionEnv,
     else:
         learner = PGLearner(fc, PGConfig(), seed=seed, params=params)
         train_online_pg(env, learner, episodes=online_episodes, seed=seed)
-    return MiragePolicy(method, learner=learner)
+    return LearnerPolicy(method, learner)

@@ -326,6 +326,10 @@ class ChainResult:
     n_fallbacks: int = 0
     n_retries: int = 0
     n_ctrl_errors: int = 0
+    # owned attribution: fault events that killed >=1 of THIS chain's
+    # jobs, and this chain's requeues — background jobs dying elsewhere
+    # on the cluster are nobody's interruption (they used to be counted
+    # here as fleet-aggregated simulator totals)
     n_faults: int = 0
     n_requeues: int = 0
 
@@ -385,18 +389,34 @@ class ChainLane:
         self.n_decisions = self.n_replayed = self.n_fallbacks = 0
         self._di = 0
         self._seen: Dict[int, Tuple[float, float]] = {}
+        # owned fault attribution (fed by the simulator's kill observer)
+        self._owned: set = set()
+        self._n_faults = 0
+        self._n_requeues = 0
 
     # ------------------------------------------------------------ helpers
     def _check_header(self, replayed: List[Dict]) -> List[Dict]:
         if not replayed:
             return []
         hdr = replayed[0]
+        if "co" in hdr:
+            raise ValueError(
+                f"journal header {hdr} was written by a co-sim service — "
+                "its decisions replay in shared-round order, not per lane")
         if (hdr.get("v") != JOURNAL_VERSION or hdr.get("seed") != self.seed
                 or hdr.get("links") != self.links):
             raise ValueError(
                 f"journal header {hdr} does not match lane config "
                 f"(seed={self.seed}, links={self.links})")
         return replayed[1:]
+
+    def _on_fault_kills(self, job_ids: np.ndarray) -> None:
+        """One fault event's requeued job ids: count the event (once) and
+        the requeues against this chain iff they hit an owned job."""
+        hit = sum(1 for jid in job_ids.tolist() if int(jid) in self._owned)
+        if hit:
+            self._n_faults += 1
+            self._n_requeues += hit
 
     def _pred_end(self) -> float:
         pred = self.env.pred
@@ -415,6 +435,7 @@ class ChainLane:
                  else env.sim.now)
         env.sim.run_until(t_sub)
         succ = env.chain.make_sub(link, t_sub)
+        self._owned.add(succ.job_id)
         retries0, errors0 = self.ctrl.n_retries, self.ctrl.n_errors
         self.ctrl.submit(env.sim, succ)
         wait = env.sim.run_until_started(succ)
@@ -458,6 +479,12 @@ class ChainLane:
         self.n_decisions = self.n_replayed = self.n_fallbacks = 0
         self._di = 0
         self._seen = {}
+        # owned attribution window opens at the predecessor's start (the
+        # single-tenant convention): the lane's private fork then notifies
+        # us of every fault kill, and we count only the chain's own jobs
+        self._owned = {self.env.pred.job_id}
+        self._n_faults = self._n_requeues = 0
+        self.env.sim.set_kill_observer(self._on_fault_kills)
         for rec in replayed:
             if self.done:       # journal longer than the chain: ignore tail
                 break
@@ -510,8 +537,7 @@ class ChainLane:
             n_decisions=self.n_decisions, n_replayed=self.n_replayed,
             n_fallbacks=self.n_fallbacks, n_retries=self.ctrl.n_retries,
             n_ctrl_errors=self.ctrl.n_errors,
-            n_faults=self.env.sim.n_node_failures,
-            n_requeues=self.env.sim.n_requeues)
+            n_faults=self._n_faults, n_requeues=self._n_requeues)
 
 
 class ChainDriver:

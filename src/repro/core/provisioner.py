@@ -40,13 +40,12 @@ from __future__ import annotations
 import bisect
 import copy
 import dataclasses
-import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.sim.faults import FaultPlan
-from repro.sim.simulator import SlurmSimulator, sample_batch
+from repro.sim.simulator import SlurmSimulator, sample_batch, step_batch
 from repro.sim.trace import Job
 from repro.sim.workload import SubJobChain, pair_outcome
 from .reward import RewardConfig, shape_reward
@@ -225,16 +224,6 @@ class ProvisionEnv:
                    "forced": forced,
                    "n_faults": self.sim.n_node_failures - f0,
                    "n_requeues": self.sim.n_requeues - rq0}
-
-
-def _sim_nbytes(sim: SlurmSimulator) -> int:
-    """Deprecated shim (one release): use ``sim.fork_nbytes()``. The
-    estimate moved behind the simulator boundary so callers stop sizing
-    private arrays directly."""
-    warnings.warn("_sim_nbytes() is deprecated; use "
-                  "SlurmSimulator.fork_nbytes()", DeprecationWarning,
-                  stacklevel=2)
-    return sim.fork_nbytes()
 
 
 class ReplayCheckpointCache:
@@ -686,8 +675,8 @@ class VectorProvisionEnv:
             infos[i] = info
             self.dones[i] = True
         # waiting lanes advance one interval and push one batched slab
-        for i in wait_idx:
-            self.envs[int(i)].sim.step(self.cfg.interval)
+        step_batch([self.envs[int(i)].sim for i in wait_idx],
+                   self.cfg.interval)
         if self._faulted:
             # the advance (and the successor waits above) may have killed
             # or restarted predecessors: re-sync before encoding/serving

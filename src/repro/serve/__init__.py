@@ -8,6 +8,8 @@ optional-dependency policy (ROADMAP.md, enforced by import-discipline).
 _EXPORTS = {
     "Request": "engine",
     "ServeEngine": "engine",
+    "CoSimChainLane": "cosim",
+    "CoSimWorld": "cosim",
     "ProvisionService": "provision_service",
     "ServiceConfig": "provision_service",
     "ServiceHealth": "provision_service",

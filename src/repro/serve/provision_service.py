@@ -50,6 +50,7 @@ from repro.core.policy import FallbackPolicy, Policy, stack_obs
 from repro.core.provisioner import EnvConfig, ReplayCheckpointCache
 from repro.sim.trace import Job
 from repro.train.fault import PreemptionGuard
+from .cosim import CoSimChainLane, CoSimWorld
 
 
 @dataclasses.dataclass
@@ -64,6 +65,12 @@ class ServiceConfig:
     breaker_window: int = 16
     breaker_threshold: int = 4
     breaker_cooldown_s: float = 5.0
+    # co-simulation: all tenants' chains contend in ONE shared simulator
+    # (repro.serve.cosim) instead of one fork each. Load shedding is
+    # disabled in this mode — every awaiting tenant must decide before
+    # the shared clock advances, so a wall-clock shed would leak
+    # simulated time between tenants' decisions.
+    co_sim: bool = False
 
 
 @dataclasses.dataclass
@@ -134,14 +141,30 @@ class ProvisionService:
             trace, cfg.n_nodes, faults=cfg.faults)
         if journal_dir:
             os.makedirs(journal_dir, exist_ok=True)
-        self.lanes = [
-            ChainLane(trace, cfg, links=self.svc.links, seed=seed + i,
-                      journal=(DecisionJournal(os.path.join(
-                          journal_dir, f"tenant_{i:05d}.journal"))
-                          if journal_dir else None),
-                      retry=retry_factory(i) if retry_factory else None,
-                      cache=self.cache)
-            for i in range(self.svc.tenants)]
+
+        def _journal(i: int) -> Optional[DecisionJournal]:
+            return (DecisionJournal(os.path.join(
+                journal_dir, f"tenant_{i:05d}.journal"))
+                if journal_dir else None)
+
+        if self.svc.co_sim:
+            self.cosim: Optional[CoSimWorld] = CoSimWorld(
+                trace, cfg, self.svc.tenants, seed=seed, cache=self.cache)
+            self.lanes: List[ChainLane] = [
+                CoSimChainLane(trace, cfg, self.cosim, i,
+                               links=self.svc.links, seed=seed + i,
+                               journal=_journal(i),
+                               retry=retry_factory(i) if retry_factory
+                               else None, cache=self.cache)
+                for i in range(self.svc.tenants)]
+        else:
+            self.cosim = None
+            self.lanes = [
+                ChainLane(trace, cfg, links=self.svc.links, seed=seed + i,
+                          journal=_journal(i),
+                          retry=retry_factory(i) if retry_factory else None,
+                          cache=self.cache)
+                for i in range(self.svc.tenants)]
         self.policy = (policy if isinstance(policy, FallbackPolicy)
                        else FallbackPolicy(
                            policy, deadline_s=self.svc.decision_deadline_s,
@@ -168,9 +191,18 @@ class ProvisionService:
     # ------------------------------------------------------------- start
     def start(self, t_starts: Optional[Sequence[float]] = None) -> None:
         """Begin (or rehydrate) every tenant lane. With journals on disk
-        this replays each tenant's logged decision prefix verbatim."""
-        for i, lane in enumerate(self.lanes):
-            lane.begin(t_start=t_starts[i] if t_starts is not None else None)
+        this replays each tenant's logged decision prefix verbatim. In
+        co-sim mode the tenants share one episode start — ``t_starts[0]``
+        pins it (the rest are ignored); the journals replay together, in
+        shared-round order."""
+        if self.cosim is not None:
+            t0 = (float(np.asarray(t_starts, np.float64).ravel()[0])
+                  if t_starts is not None else None)
+            self.cosim.begin(t_start=t0)
+        else:
+            for i, lane in enumerate(self.lanes):
+                lane.begin(t_start=t_starts[i] if t_starts is not None
+                           else None)
         self.started = True
 
     # --------------------------------------------------------- admission
@@ -259,6 +291,8 @@ class ProvisionService:
         service, or ``max_rounds`` elapses."""
         if not self.started:
             self.start()
+        if self.cosim is not None:
+            return self._run_co(max_rounds)
         reason = "completed"
         while True:
             live = self.live_tenants()
@@ -271,6 +305,41 @@ class ProvisionService:
                 reason = "max_rounds"
                 break
             self._round(live)
+        return self._result(reason)
+
+    def _run_co(self, max_rounds: Optional[int]) -> ServiceResult:
+        """Co-sim serving loop: serve every awaiting tenant (no shedding
+        — the shared clock cannot advance past an undecided tenant), then
+        close the shared round. A drain request finishes the in-flight
+        batch, journaling included, and leaves the round un-advanced; the
+        restarted service replays the partial round from the journals and
+        serves the remainder at the identical round head."""
+        reason = "completed"
+        while True:
+            live = self.live_tenants()
+            if not live:
+                break
+            if self.guard.should_stop():
+                reason = "drained"
+                break
+            if max_rounds is not None and self.n_rounds >= max_rounds:
+                reason = "max_rounds"
+                break
+            self.n_rounds += 1
+            awaiting = [i for i in live if self.lanes[i].awaiting]
+            if awaiting:
+                now = self.clock()
+                for i in awaiting:
+                    self._arrival[i] = now
+                interrupted = False
+                for c0 in range(0, len(awaiting), self.svc.max_batch):
+                    if c0 > 0 and self.guard.should_stop():
+                        interrupted = True   # graceful drain mid-round
+                        break
+                    self._serve_chunk(awaiting[c0:c0 + self.svc.max_batch])
+                if interrupted:
+                    continue                 # round stays un-advanced
+            self.cosim.advance_round()
         return self._result(reason)
 
     def _result(self, reason: str) -> ServiceResult:

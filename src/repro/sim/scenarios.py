@@ -22,6 +22,7 @@ stays importable from ``repro.sim`` without a package cycle.
 from __future__ import annotations
 
 import dataclasses
+import re
 from typing import Dict, Iterable, Iterator, List, Optional, Union
 
 from .faults import FAULT_PROFILES, FaultPlan, FaultSpec
@@ -33,6 +34,10 @@ LOAD_LEVELS: Dict[str, float] = {"light": 0.45, "medium": 0.8, "heavy": 1.05}
 
 # chained sub-job shapes: Fig. 8 single-node pairs, Fig. 9 8-node pairs
 CHAIN_SHAPES: Dict[str, int] = {"single": 1, "multi": 8}
+
+# canonical co-simulation tenant count registered as "<cell>/co8" cells;
+# arbitrary counts resolve through get_scenario("<cell>/co<N>")
+CO_TENANTS = 8
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,6 +51,7 @@ class Scenario:
     chain_nodes: int
     fault: str = ""                      # fault profile name; "" = none
     fault_spec: Optional[FaultSpec] = None
+    tenants: int = 1                     # co-sim tenant count; 1 = solo
 
     @property
     def cluster(self) -> str:
@@ -54,6 +60,10 @@ class Scenario:
     @property
     def _fault_suffix(self) -> str:
         return f"/{self.fault}" if self.fault else ""
+
+    @property
+    def _co_suffix(self) -> str:
+        return f"/co{self.tenants}" if self.tenants > 1 else ""
 
     def with_chain_nodes(self, n_nodes: int) -> "Scenario":
         """This cell with an arbitrary chain size: the registered shape
@@ -64,11 +74,26 @@ class Scenario:
         for cname, nodes in CHAIN_SHAPES.items():
             if nodes == n_nodes:
                 return SCENARIOS[f"{self.cluster}/{self.load}/{cname}"
-                                 f"{self._fault_suffix}"]
+                                 f"{self._fault_suffix}"
+                                 ].with_tenants(self.tenants)
         return dataclasses.replace(
             self, name=(f"{self.cluster}/{self.load}/{n_nodes}n"
-                        f"{self._fault_suffix}"),
+                        f"{self._fault_suffix}{self._co_suffix}"),
             chain=f"{n_nodes}n", chain_nodes=n_nodes)
+
+    def with_tenants(self, tenants: int) -> "Scenario":
+        """This cell with a co-simulation tenant count: the registered
+        ``/co<N>`` cell when one exists (``CO_TENANTS``, or back to the
+        solo cell at 1), else an ad-hoc variant — sweep and bench runners
+        accept arbitrary counts (e.g. ``co1024``)."""
+        if tenants == self.tenants:
+            return self
+        base = (self.name[:-len(self._co_suffix)] if self.tenants > 1
+                else self.name)
+        name = base if tenants <= 1 else f"{base}/co{tenants}"
+        if name in SCENARIOS:
+            return SCENARIOS[name]
+        return dataclasses.replace(self, name=name, tenants=tenants)
 
     def make_trace(self, months: Optional[int] = None, seed: int = 0
                    ) -> List[Job]:
@@ -114,6 +139,22 @@ class Scenario:
                               faults=self.make_fault_plan(trace, seed))
         return make_vector_env(trace, cfg, batch, seed=seed, cache=cache)
 
+    def make_co_vector_env(self, groups: int,
+                           tenants: Optional[int] = None,
+                           months: Optional[int] = None, seed: int = 0,
+                           history: int = 144, interval: float = 600.0,
+                           cache=None, trace: Optional[List[Job]] = None):
+        """A (groups x tenants)-lane CoTenantVectorEnv for this scenario:
+        each group is one shared simulator in which the cell's tenant
+        count of chains contend (``tenants`` overrides the cell's
+        count for ad-hoc sweeps)."""
+        trace = trace if trace is not None else self.make_trace(months, seed)
+        cfg = self.env_config(history, interval,
+                              faults=self.make_fault_plan(trace, seed))
+        return make_co_vector_env(trace, cfg, groups,
+                                  self.tenants if tenants is None
+                                  else tenants, seed=seed, cache=cache)
+
 
 def make_env(trace: List[Job], cfg, *, seed: int = 0, cache=None,
              **overrides):
@@ -149,6 +190,24 @@ def make_vector_env(trace: List[Job], cfg, batch: int, *, seed: int = 0,
     return VectorProvisionEnv(trace, cfg, batch, seed=seed, cache=cache)
 
 
+def make_co_vector_env(trace: List[Job], cfg, groups: int, tenants: int,
+                       *, seed: int = 0, cache=None, **overrides):
+    """THE constructor for co-tenant vectorized environments.
+
+    Like ``make_vector_env`` but returns a ``CoTenantVectorEnv`` whose
+    ``groups * tenants`` lanes are grouped into ``groups`` shared
+    simulators of ``tenants`` contending chains each. With
+    ``tenants=1`` group ``g`` is bit-identical to lane ``g`` of
+    ``make_vector_env(trace, cfg, groups, seed=seed)`` (test-pinned).
+    Pass ``cache=`` to share one ``ReplayCheckpointCache`` across envs
+    over the same trace."""
+    from repro.core.cotenant import CoTenantVectorEnv
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    return CoTenantVectorEnv(trace, cfg, groups, tenants, seed=seed,
+                             cache=cache)
+
+
 def _build_registry() -> Dict[str, Scenario]:
     reg = {}
     for prof in PROFILES.values():
@@ -161,6 +220,12 @@ def _build_registry() -> Dict[str, Scenario]:
                     f = Scenario(f"{s.name}/{fname}", prof, lname, scale,
                                  cname, nodes, fault=fname, fault_spec=spec)
                     reg[f.name] = f
+    # every cell gets a canonical co-simulation variant: same trace and
+    # fault plan, CO_TENANTS chains contending in one shared simulator
+    for s in list(reg.values()):
+        co = dataclasses.replace(s, name=f"{s.name}/co{CO_TENANTS}",
+                                 tenants=CO_TENANTS)
+        reg[co.name] = co
     return reg
 
 
@@ -179,29 +244,43 @@ def _chain_name(chain: Union[str, int]) -> str:
 
 def get_scenario(cluster: str, load: Optional[str] = None,
                  chain: Union[str, int] = "single",
-                 fault: str = "") -> Scenario:
-    """Look up a scenario by full name (``"V100/heavy/single"`` or
-    ``"V100/heavy/single/faulty"``) or by (cluster, load, chain, fault)
-    components; ``chain`` accepts a shape name or a registered node
-    count, ``fault`` a registered fault profile name ("" = fault-free)."""
+                 fault: str = "", tenants: int = 1) -> Scenario:
+    """Look up a scenario by full name (``"V100/heavy/single"``,
+    ``"V100/heavy/single/faulty"``, ``"V100/heavy/single/co8"``) or by
+    (cluster, load, chain, fault, tenants) components; ``chain``
+    accepts a shape name or a registered node count, ``fault`` a
+    registered fault profile name ("" = fault-free). A trailing
+    ``/co<N>`` selects the N-tenant co-simulation variant for *any* N
+    (registered for ``co8``; ad-hoc, e.g. ``co1024``, otherwise)."""
     if load is None:
-        return SCENARIOS[cluster]
+        name = cluster
+        if name not in SCENARIOS:
+            m = re.fullmatch(r"(.+)/co(\d+)", name)
+            if m is not None:
+                return SCENARIOS[m.group(1)].with_tenants(int(m.group(2)))
+        return SCENARIOS[name]
     suffix = f"/{fault}" if fault else ""
-    return SCENARIOS[f"{cluster}/{load}/{_chain_name(chain)}{suffix}"]
+    base = SCENARIOS[f"{cluster}/{load}/{_chain_name(chain)}{suffix}"]
+    return base.with_tenants(tenants)
 
 
 def iter_scenarios(clusters: Optional[Iterable[str]] = None,
                    loads: Optional[Iterable[str]] = None,
                    chains: Optional[Iterable[Union[str, int]]] = None,
-                   faults: Optional[Iterable[str]] = None
+                   faults: Optional[Iterable[str]] = None,
+                   tenants: Optional[Iterable[int]] = (1,)
                    ) -> Iterator[Scenario]:
     """Iterate the grid in registry order, optionally filtered by cluster
     names, load-level names, chain shapes (names or node counts), and
     fault profile names (``""`` selects the fault-free cells; the default
-    ``None`` — like the other filters — selects everything)."""
+    ``None`` — like the other filters — selects everything). Unlike the
+    other filters, ``tenants`` defaults to ``(1,)`` — sweeps written
+    against the solo grid keep their cell set; pass ``None`` (or an
+    explicit count list) to include the ``/co<N>`` cells."""
     chain_names = None if chains is None else {_chain_name(c)
                                                for c in chains}
     fault_names = None if faults is None else set(faults)
+    tenant_counts = None if tenants is None else set(tenants)
     for s in SCENARIOS.values():
         if clusters is not None and s.cluster not in clusters:
             continue
@@ -210,5 +289,7 @@ def iter_scenarios(clusters: Optional[Iterable[str]] = None,
         if chain_names is not None and s.chain not in chain_names:
             continue
         if fault_names is not None and s.fault not in fault_names:
+            continue
+        if tenant_counts is not None and s.tenants not in tenant_counts:
             continue
         yield s

@@ -93,6 +93,10 @@ class SlurmSimulator:
         self.n_node_failures = 0
         self.n_requeues = 0
         self.lost_node_s = 0.0
+        # fault-kill observer: called once per fault event with the
+        # external job_ids it requeued (attribution hook; see
+        # set_kill_observer). Never inherited by forks.
+        self._kill_obs = None
         # --- structure-of-arrays job store -------------------------------
         cap = 64
         self._cap = cap
@@ -365,6 +369,10 @@ class SlurmSimulator:
         if requeue:
             self._q = np.concatenate([self._q, ids])    # wholesale: CoW-safe
             self.n_requeues += int(ids.size)
+            if self._kill_obs is not None:
+                # attribution boundary: external ids of the jobs this
+                # fault event requeued (cancel() never notifies)
+                self._kill_obs(self._ids[ids])
         # boundary write-back (same ownership rule as _start_batch)
         jobs, tracked = self._jobs, self._tracked
         for i in ids.tolist():
@@ -373,6 +381,17 @@ class SlurmSimulator:
                 j.start_time = -1.0
                 j.end_time = -1.0
         self._noop_free = -1               # free nodes / queue changed
+
+    def set_kill_observer(self, obs) -> None:
+        """Register the fault-kill observer: ``obs(job_ids)`` fires once
+        per fault event with the int64 array of external job_ids that
+        event requeued. One observer per simulator (last wins; ``None``
+        clears); forks start with no observer — a fork is a new world and
+        must opt in again. Intentional ``cancel()`` never notifies: the
+        hook exists to attribute *failures* to the tenant owning the
+        killed job (``repro.sim.multitenant``), not to count teardowns.
+        """
+        self._kill_obs = obs
 
     def cancel(self, job_id: int) -> bool:
         """Best-effort cancel: drop the job from the queue or pending
@@ -975,6 +994,7 @@ class SlurmSimulator:
         s.n_node_failures = self.n_node_failures
         s.n_requeues = self.n_requeues
         s.lost_node_s = self.lost_node_s
+        s._kill_obs = None          # observers never follow a fork
         s._forked = True
         s._tracked = set()
         # the no-op scheduling cache references queue layout; start the
@@ -1094,3 +1114,13 @@ def sample_batch(sims: Sequence[SlurmSimulator]) -> SampleBatch:
             r_limits[a:e] = s._lim[r]
     return SampleBatch(times, q_count, q_off, q_sizes, q_ages, q_limits,
                        r_count, r_off, r_sizes, r_elapsed, r_limits)
+
+
+def step_batch(sims: Sequence[SlurmSimulator], dt: float) -> None:
+    """Advance B simulators by ``dt`` each (the lockstep-interval twin of
+    ``sample_batch``). Simulator advances are object-granular by design —
+    each lane drains its own event heap — so like the CSR gather above,
+    the per-simulator loop IS the batched API; the inner work is the
+    vectorized event engine."""
+    for s in sims:   # repro-static: ok[lane-loop] per-simulator event advance
+        s.run_until(s.now + dt)

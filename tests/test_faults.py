@@ -11,10 +11,10 @@ import numpy as np
 import pytest
 
 import repro.sim.simulator as sim_mod
-from repro.core import (DQNConfig, DQNLearner, EnvConfig, FoundationConfig,
-                        MiragePolicy, PGConfig, PGLearner, ProvisionEnv,
-                        ReplayCheckpointCache, TreePolicy,
-                        VectorProvisionEnv, evaluate_batch)
+from repro.core import (AvgWaitPolicy, DQNConfig, DQNLearner, EnvConfig,
+                        FoundationConfig, LearnerPolicy, PGConfig, PGLearner,
+                        ProvisionEnv, ReactivePolicy, ReplayCheckpointCache,
+                        TreePolicy, VectorProvisionEnv, evaluate_batch)
 from repro.core.agent import ALL_METHODS
 from repro.core.trees import GradientBoosting, RandomForest
 from repro.sim import (FAULT_PROFILES, FaultPlan, SlurmSimulator,
@@ -222,18 +222,18 @@ def _all_policies():
     rng = np.random.default_rng(0)
     X = rng.normal(size=(48, 4 * 40)).astype(np.float32)
     y = np.abs(rng.normal(size=48)) * HOUR
-    out = {"reactive": MiragePolicy("reactive"), "avg": MiragePolicy("avg")}
-    out["avg"].avg.waits = [2 * HOUR, 5 * HOUR, HOUR]
+    out = {"reactive": ReactivePolicy(), "avg": AvgWaitPolicy()}
+    out["avg"].waits = [2 * HOUR, 5 * HOUR, HOUR]
     for m, model in (("random_forest", RandomForest(n_trees=4, seed=0)),
                      ("xgboost", GradientBoosting(n_rounds=6, seed=0))):
-        out[m] = MiragePolicy(m, tree=TreePolicy(model.fit(X, y), m))
+        out[m] = TreePolicy(model.fit(X, y), m)
     for m in ("transformer+dqn", "transformer+pg", "moe+dqn", "moe+pg"):
         kind = "moe" if m.startswith("moe") else "transformer"
         fc = dataclasses.replace(FoundationConfig(kind=kind).reduced(),
                                  kind=kind, history=HISTORY)
         learner = (DQNLearner(fc, DQNConfig(), seed=0) if m.endswith("dqn")
                    else PGLearner(fc, PGConfig(), seed=0))
-        out[m] = MiragePolicy(m, learner=learner)
+        out[m] = LearnerPolicy(m, learner)
     return out
 
 

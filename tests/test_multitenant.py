@@ -1,0 +1,203 @@
+"""Cross-tenant co-simulation (ISSUE 10 tentpole): the N=1 identity pin
+(the co-tenant env bit-identical to the single-tenant fork engine on
+obs/rewards/dones/infos), contention smoke at T>1, the tiled CSR lane
+carving of ``sample_tenant_batch``, and owned-job fault attribution
+(a fault is charged to the tenant whose job it killed — background
+kills are nobody's).
+"""
+import numpy as np
+import pytest
+
+from repro.core import EnvConfig, ReplayCheckpointCache
+from repro.sim import (FaultPlan, MultiTenantSim, SlurmSimulator,
+                       make_co_vector_env, make_vector_env, sample_batch,
+                       sample_tenant_batch, synthesize_trace)
+from repro.sim.faults import FAIL, REPAIR
+from repro.sim.multitenant import FLEET_DIM, TENANT_ID_STRIDE
+from repro.sim.trace import V100, Job
+from repro.sim.workload import SubJobChain
+
+HOUR = 3600.0
+DAY = 24 * HOUR
+HISTORY = 12
+SEED = 100
+B = 3
+
+
+@pytest.fixture(scope="module")
+def world():
+    jobs = synthesize_trace(V100, months=1, seed=5, load_scale=1.0)
+    cfg = EnvConfig(n_nodes=V100.n_nodes, history=HISTORY, interval=1800.0)
+    cache = ReplayCheckpointCache(jobs, cfg.n_nodes)
+    return jobs, cfg, cache
+
+
+# ------------------------------------------------------- N=1 identity pin
+def test_n1_cosim_bit_identical_to_fork_engine(world):
+    """The acceptance pin: tenants=1 reduces the co-sim round protocol
+    operation-for-operation to the scalar submission sequence, so the
+    co env must match the single-tenant fork engine bit-for-bit on every
+    obs key, reward, done and info — the only addition is the "fleet"
+    block."""
+    jobs, cfg, cache = world
+    ref = make_vector_env(jobs, cfg, B, seed=SEED, cache=cache)
+    co = make_co_vector_env(jobs, cfg, B, 1, seed=SEED, cache=cache)
+    lo, hi = ref._t_start_range
+    t0s = np.random.default_rng(7).uniform(lo, hi, B)
+    obs_r = ref.reset(t_starts=t0s)
+    obs_c = co.reset(t_starts=t0s)
+    assert set(obs_c) == set(obs_r) | {"fleet"}
+    assert obs_c["fleet"].shape == (B, FLEET_DIM)
+    for key in obs_r:
+        np.testing.assert_array_equal(obs_c[key], obs_r[key])
+    rng = np.random.default_rng(3)
+    steps = 0
+    while not ref.dones.all():
+        acts = (rng.random(B) < 0.15).astype(np.int64)
+        obs_r, r_r, d_r, i_r = ref.step(acts)
+        obs_c, r_c, d_c, i_c = co.step(acts)
+        for key in obs_r:
+            np.testing.assert_array_equal(obs_c[key], obs_r[key], key)
+        np.testing.assert_array_equal(r_c, r_r)
+        np.testing.assert_array_equal(d_c, d_r)
+        assert i_c == i_r
+        steps += 1
+        assert steps < 10_000
+    assert co.dones.all()
+    assert steps > 1                           # a real multi-round episode
+
+
+# ------------------------------------------------------ contention smoke
+def test_co_tenant_contention_smoke(world):
+    """G=2 groups x T=4 contending tenants: the flattened batch runs to
+    termination with solo-shaped infos and a live fleet block."""
+    jobs, cfg, cache = world
+    co = make_co_vector_env(jobs, cfg, 2, 4, seed=SEED, cache=cache)
+    obs = co.reset()
+    assert co.batch == 8
+    assert obs["matrix"].shape == (8, HISTORY, 40)
+    assert obs["fleet"].shape == (8, FLEET_DIM)
+    assert obs["fleet"].dtype == np.float32
+    # every tenant of a group shares the population summary columns
+    for g in range(2):
+        blk = obs["fleet"][g * 4:(g + 1) * 4, :4]
+        np.testing.assert_array_equal(blk, np.broadcast_to(blk[0], blk.shape))
+    finals = [None] * 8
+    steps = 0
+    while not co.dones.all():
+        was = co.dones.copy()
+        obs, r, dones, infos = co.step(np.zeros(8, np.int64))
+        for i in np.flatnonzero(~was & dones):
+            finals[int(i)] = (float(r[i]), infos[int(i)])
+        steps += 1
+        assert steps < 10_000
+    for reward, info in finals:
+        assert np.isfinite(reward)
+        assert set(info) == {"kind", "amount_s", "wait_s", "forced",
+                             "n_faults", "n_requeues"}
+        assert info["kind"] in ("interrupt", "overlap")
+        assert info["wait_s"] >= 0.0
+    # resized keeps whole tenant groups
+    assert co.resized(4).batch == 4
+    with pytest.raises(AssertionError):
+        co.resized(6)
+
+
+def test_co_tenant_chains_really_contend(world):
+    """The point of the layer: a tenant's chain jobs occupy nodes the
+    other tenants see. With T tenants injected at one instant, the
+    shared simulator holds all T predecessors — id bands disjoint per
+    tenant."""
+    jobs, cfg, cache = world
+    co = make_co_vector_env(jobs, cfg, 1, 4, seed=SEED, cache=cache)
+    co.reset()
+    world0 = co.worlds[0]
+    ids = [world0.preds[t].job_id for t in range(4)]
+    bands = [jid // TENANT_ID_STRIDE for jid in ids]
+    assert bands == [0, 1, 2, 3]
+    assert all(jid % TENANT_ID_STRIDE >= 10 ** 6 for jid in ids)
+    # all four predecessors live in the one shared schedule
+    view = world0.sim.schedule_view()
+    assert set(ids) <= set(view.ids.tolist())
+
+
+# ------------------------------------------------- tiled CSR observation
+def test_sample_tenant_batch_tiles_shared_gather(world):
+    """Lane ``g*T + t`` must be a bit-exact copy of group ``g``'s single
+    shared gather — one ``sample_batch`` per distinct simulator, tiled
+    per tenant."""
+    jobs, cfg, cache = world
+    sim1, sim2 = cache.fork_at(5 * DAY), cache.fork_at(9 * DAY)
+    w1, w2 = MultiTenantSim(sim1, 3), MultiTenantSim(sim2, 2)
+    base = sample_batch([sim1, sim2])
+    sb = sample_tenant_batch([w1, w2])
+    lanes_of = [0, 0, 0, 1, 1]                 # 3 + 2 tenant lanes
+    np.testing.assert_array_equal(sb.times, base.times[lanes_of])
+    np.testing.assert_array_equal(sb.q_count, base.q_count[lanes_of])
+    np.testing.assert_array_equal(sb.r_count, base.r_count[lanes_of])
+    for lane, g in enumerate(lanes_of):
+        for flat, off, boff in (("q_sizes", sb.q_off, base.q_off),
+                                ("q_ages", sb.q_off, base.q_off),
+                                ("q_limits", sb.q_off, base.q_off),
+                                ("r_sizes", sb.r_off, base.r_off),
+                                ("r_elapsed", sb.r_off, base.r_off),
+                                ("r_limits", sb.r_off, base.r_off)):
+            np.testing.assert_array_equal(
+                getattr(sb, flat)[off[lane]:off[lane + 1]],
+                getattr(base, flat)[boff[g]:boff[g + 1]],
+                f"lane {lane} {flat}")
+    # reps override: 0 drops a world, 1 everywhere short-circuits to the
+    # base gather
+    only2 = sample_tenant_batch([w1, w2], reps=np.array([0, 1]))
+    ref2 = sample_batch([sim2])
+    np.testing.assert_array_equal(only2.q_sizes, ref2.q_sizes)
+    np.testing.assert_array_equal(only2.r_elapsed, ref2.r_elapsed)
+    np.testing.assert_array_equal(only2.times, ref2.times)
+    ones = sample_tenant_batch([w1, w2], reps=np.array([1, 1]))
+    np.testing.assert_array_equal(ones.q_sizes, base.q_sizes)
+    np.testing.assert_array_equal(ones.q_off, base.q_off)
+
+
+# ------------------------------------------------- owned-job attribution
+def test_fault_attributed_to_owning_tenant():
+    """4-node cluster, two tenants' 2-node predecessors started at t=0.
+    The 2-node failure at t=1h kills exactly one of them (newest-start-
+    first, tie toward the larger registration index -> tenant 1): only
+    that tenant's owned counters move."""
+    plan = FaultPlan(np.array([1 * HOUR, 2 * HOUR]),
+                     np.array([FAIL, REPAIR]), np.array([2, 2]))
+    sim = SlurmSimulator(4, mode="fast", faults=plan)
+    mt = MultiTenantSim(sim, 2)
+    for t in range(2):
+        mt.submit_pred(t, SubJobChain(
+            user_id=1 + t, n_nodes=2, sub_limit=10 * HOUR,
+            next_id=10 ** 6 + t * TENANT_ID_STRIDE))
+    mt.start_preds()
+    assert mt.preds[0].start_time == 0.0 == mt.preds[1].start_time
+    sim.run_until(3 * HOUR)
+    assert sim.n_node_failures == 1 and sim.n_requeues == 1   # fleet
+    assert mt.fault_counts.tolist() == [0, 1]                 # owned
+    assert mt.requeue_counts.tolist() == [0, 1]
+    assert mt.counters(0) == (0, 0)
+    assert mt.counters(1) == (1, 1)
+
+
+def test_background_kill_is_nobodys_interruption():
+    """A fault that only kills a background job must not touch any
+    tenant's counters — the fleet totals move, the owned ones do not
+    (the old fleet-window accounting charged everyone)."""
+    plan = FaultPlan(np.array([1 * HOUR, 2 * HOUR]),
+                     np.array([FAIL, REPAIR]), np.array([2, 2]))
+    sim = SlurmSimulator(2, mode="fast", faults=plan)
+    bg = Job(job_id=1, user_id=1, submit_time=0.0, runtime=10 * HOUR,
+             time_limit=12 * HOUR, n_nodes=2)
+    sim.load([bg])
+    mt = MultiTenantSim(sim, 1)
+    mt.submit_pred(0, SubJobChain(user_id=5, n_nodes=2,
+                                  sub_limit=4 * HOUR, next_id=10 ** 6))
+    mt.start_preds()          # queues behind bg; bg dies+requeues at 1h
+    assert sim.n_node_failures == 1 and sim.n_requeues == 1
+    assert mt.fault_counts.tolist() == [0]
+    assert mt.requeue_counts.tolist() == [0]
+    assert mt.counters(0) == (0, 0)
+    assert mt.preds[0].start_time >= 0        # the pred did start

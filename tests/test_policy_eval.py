@@ -14,8 +14,8 @@ import numpy as np
 import pytest
 
 from repro.core import (DQNConfig, DQNLearner, EnvConfig, FoundationConfig,
-                        MiragePolicy, PGConfig, PGLearner, ProvisionEnv,
-                        ReplayCheckpointCache, TreePolicy,
+                        LearnerPolicy, PGConfig, PGLearner, ProvisionEnv,
+                        ReactivePolicy, ReplayCheckpointCache, TreePolicy,
                         VectorProvisionEnv, evaluate_batch)
 from repro.core.agent import ALL_METHODS
 from repro.core.baselines import AvgWaitPolicy
@@ -46,24 +46,24 @@ def stateless_policies():
     rng = np.random.default_rng(0)
     X = rng.normal(size=(48, 4 * 40)).astype(np.float32)
     y = np.abs(rng.normal(size=48)) * HOUR
-    out = {"reactive": MiragePolicy("reactive")}
+    out = {"reactive": ReactivePolicy()}
     for m, model in (("random_forest", RandomForest(n_trees=4, seed=0)),
                      ("xgboost", GradientBoosting(n_rounds=6, seed=0))):
-        out[m] = MiragePolicy(m, tree=TreePolicy(model.fit(X, y), m))
+        out[m] = TreePolicy(model.fit(X, y), m)
     for m in ("transformer+dqn", "transformer+pg", "moe+dqn", "moe+pg"):
         kind = "moe" if m.startswith("moe") else "transformer"
         fc = dataclasses.replace(FoundationConfig(kind=kind).reduced(),
                                  kind=kind, history=HISTORY)
         learner = (DQNLearner(fc, DQNConfig(), seed=0) if m.endswith("dqn")
                    else PGLearner(fc, PGConfig(), seed=0))
-        out[m] = MiragePolicy(m, learner=learner)
+        out[m] = LearnerPolicy(m, learner)
     return out
 
 
 def make_policy(method, stateless):
     if method == "avg":
-        pol = MiragePolicy("avg")
-        pol.avg.waits = WARM_WAITS       # same warm state every instance
+        pol = AvgWaitPolicy()
+        pol.waits = WARM_WAITS           # same warm state every instance
         return pol
     return stateless[method]
 
@@ -109,11 +109,11 @@ def test_evaluate_b1_observe_cadence(world):
     episodes the window holds the warm start plus k observed waits."""
     jobs, cfg, cache = world
     venv = VectorProvisionEnv(jobs, cfg, 1, seed=SEED, cache=cache)
-    pol = MiragePolicy("avg")
-    pol.avg.waits = WARM_WAITS
+    pol = AvgWaitPolicy()
+    pol.waits = WARM_WAITS
     res = evaluate_batch(venv, pol, episodes=2, seed=7)
-    assert len(pol.avg.waits) == len(WARM_WAITS) + 2
-    assert pol.avg.waits[-2:] == [w * HOUR for w in res.waits_h]
+    assert len(pol.waits) == len(WARM_WAITS) + 2
+    assert pol.waits[-2:] == [w * HOUR for w in res.waits_h]
 
 
 def test_avg_wait_deque_matches_list_window():
@@ -202,10 +202,12 @@ def test_build_policy_pg_passes_seed(world, monkeypatch):
 
 
 def test_scenario_registry():
-    from repro.sim import (CHAIN_SHAPES, FAULT_PROFILES, LOAD_LEVELS,
-                           SCENARIOS, get_scenario, iter_scenarios)
+    from repro.sim import (CHAIN_SHAPES, CO_TENANTS, FAULT_PROFILES,
+                           LOAD_LEVELS, SCENARIOS, get_scenario,
+                           iter_scenarios)
+    # every cell has a /co<N> co-simulation twin (the trailing x2)
     assert len(SCENARIOS) == (3 * len(LOAD_LEVELS) * len(CHAIN_SHAPES)
-                              * (1 + len(FAULT_PROFILES)))
+                              * (1 + len(FAULT_PROFILES)) * 2)
     s = get_scenario("V100", "heavy", "single")
     assert s is get_scenario("V100/heavy/single")
     assert s is get_scenario("V100", "heavy", 1)      # node-count lookup
@@ -234,3 +236,24 @@ def test_scenario_registry():
     assert [m.name for m in faulted] == [
         "RTX/light/multi/faulty", "RTX/medium/multi/faulty",
         "RTX/heavy/multi/faulty"]
+    # co-simulation cells: a registered /co<N> twin per cell, an ad-hoc
+    # variant for any other tenant count, and with_tenants round-trips
+    co = get_scenario("V100", "heavy", "single", tenants=CO_TENANTS)
+    assert co is get_scenario(f"V100/heavy/single/co{CO_TENANTS}")
+    assert co.tenants == CO_TENANTS and co.load_scale == s.load_scale
+    assert s.with_tenants(CO_TENANTS) is co
+    assert co.with_tenants(1) is s and s.with_tenants(1) is s
+    ad_hoc_co = get_scenario("V100/heavy/single/co1024")
+    assert ad_hoc_co.tenants == 1024
+    assert ad_hoc_co.name == "V100/heavy/single/co1024"
+    assert co.with_chain_nodes(8).tenants == CO_TENANTS
+    # the tenants filter defaults to the solo grid (sweep stability)
+    solo_only = list(iter_scenarios(clusters=["RTX"], chains=["multi"],
+                                    faults=[""]))
+    assert all(m.tenants == 1 for m in solo_only)
+    co_cells = list(iter_scenarios(clusters=["RTX"], chains=["multi"],
+                                   faults=[""], tenants=[CO_TENANTS]))
+    assert [m.name for m in co_cells] == [
+        f"RTX/light/multi/co{CO_TENANTS}",
+        f"RTX/medium/multi/co{CO_TENANTS}",
+        f"RTX/heavy/multi/co{CO_TENANTS}"]

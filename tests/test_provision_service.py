@@ -283,3 +283,104 @@ def test_graceful_drain_health_and_rehydrate(world, reference, tmp_path):
     h2 = s2.health()
     assert h2.tenants_live == 0 and h2.queue_depth == 0
     assert h2.max_lag_rounds == 0
+
+
+# ---------------------------------------------- co-simulation (ISSUE 10)
+def _co_service(world, policy=None, journal_dir=None, **kw):
+    jobs, cfg, cache = world
+    kw.setdefault("retry_factory", _retry_factory)
+    return ProvisionService(
+        jobs, cfg, policy or FallbackPolicy(ReactivePolicy()),
+        svc=ServiceConfig(tenants=TENANTS, links=LINKS, max_batch=4,
+                          co_sim=True),
+        seed=SEED, journal_dir=journal_dir, cache=cache, **kw)
+
+
+@pytest.fixture(scope="module")
+def co_reference(world):
+    """Uninterrupted co-sim run — the identity target for co chaos."""
+    res = _co_service(world).run()
+    assert res.reason == "completed"
+    assert all(t.reason == "completed" for t in res.tenants)
+    return res
+
+
+@pytest.mark.parametrize("kill_after_batches", [1, 5])
+def test_cosim_kill_midround_restart_identical(world, co_reference,
+                                               tmp_path,
+                                               kill_after_batches):
+    """The co-sim acceptance test: killed abruptly mid-round (6 tenants
+    x max_batch=4 means the shared round is two chunks, so the kill
+    lands with a partial round journaled, plus a torn tail) and
+    restarted against its journals, the service replays the shared
+    schedule exactly — every tenant's schedule bit-identical to the
+    uninterrupted co run."""
+    jdir = str(tmp_path / f"co{kill_after_batches}")
+
+    class Dying(ReactivePolicy):
+        def __init__(self):
+            super().__init__()
+            self.batches = 0
+
+        def act_batch(self, obs):
+            if self.batches >= kill_after_batches:
+                raise Kill()
+            self.batches += 1
+            return super().act_batch(obs)
+
+    first = _co_service(world, policy=FallbackPolicy(Dying()),
+                        journal_dir=jdir)
+    with pytest.raises(Kill):
+        first.run()
+    applied = first.n_decisions
+    assert 0 < applied < co_reference.n_decisions
+
+    # the crash also tore the tail of one tenant's journal mid-append
+    with open(f"{jdir}/tenant_00000.journal", "ab") as f:
+        f.write(b"\x00\x01\x02")
+
+    res = _co_service(world, journal_dir=jdir).run()
+    assert res.reason == "completed"
+    assert res.n_replayed == applied          # every journaled decision
+    assert res.n_replayed + res.n_decisions == co_reference.n_decisions
+    assert _schedules(res) == _schedules(co_reference)
+
+    # a second rehydrate replays everything and applies nothing new
+    replay_only = _co_service(world, journal_dir=jdir).run()
+    assert replay_only.n_replayed == co_reference.n_decisions
+    assert replay_only.n_decisions == 0
+    assert _schedules(replay_only) == _schedules(co_reference)
+
+
+def test_cosim_rejects_cross_mode_journals(world, tmp_path):
+    """Journals are mode-stamped: a co-sim service refuses journals
+    written by the per-fork service and vice versa — silently replaying
+    a decision stream against the wrong engine would corrupt schedules."""
+    solo_dir, co_dir = str(tmp_path / "solo"), str(tmp_path / "co")
+    assert _service(world, journal_dir=solo_dir).run().reason == "completed"
+    with pytest.raises(ValueError, match="co"):
+        _co_service(world, journal_dir=solo_dir).run()
+
+    assert _co_service(world, journal_dir=co_dir).run().reason == "completed"
+    with pytest.raises(ValueError, match="co-sim"):
+        _service(world, journal_dir=co_dir).run()
+
+
+def test_cosim_faults_attributed_to_owning_tenant(world, co_reference):
+    """Satellite regression: on a faulted co-sim cell each tenant's
+    reported fault/requeue counts are its OWNED counts (the tenant whose
+    job the fault killed), not the fleet-window totals every tenant
+    would otherwise share."""
+    s = _co_service(world)
+    res = s.run()
+    assert res.reason == "completed"
+    w = s.cosim.world
+    for i, t in enumerate(res.tenants):
+        assert t.n_faults == int(w.fault_counts[i])
+        assert t.n_requeues == int(w.requeue_counts[i])
+    # the shared background DID fault during the serving window, yet only
+    # tenants whose jobs were hit carry counts — owned <= fleet, and the
+    # background's own kills are nobody's interruption
+    assert w.sim.n_node_failures > 0
+    assert sum(t.n_faults for t in res.tenants) <= w.sim.n_node_failures
+    assert sum(t.n_requeues for t in res.tenants) <= w.sim.n_requeues

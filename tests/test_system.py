@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.core import (DQNConfig, DQNLearner, EnvConfig, FoundationConfig,
-                        MiragePolicy, ProvisionEnv, ReplayCheckpointCache,
+                        LearnerPolicy, ProvisionEnv, ReplayCheckpointCache,
                         VectorProvisionEnv, build_policy, evaluate_batch,
                         pretrain_foundation, train_online_dqn)
 from repro.core.provisioner import collect_offline_samples
@@ -43,7 +43,7 @@ def test_heuristics_ordering(setup):
     r_reactive = _evaluate(env, build_policy("reactive", env), episodes=6,
                            seed=7)
     pol_avg = build_policy("avg", env)
-    pol_avg.avg.waits = [s["wait_s"] for s in samples]   # warm start T_avg
+    pol_avg.waits = [s["wait_s"] for s in samples]       # warm start T_avg
     r_avg = _evaluate(env, pol_avg, episodes=6, seed=7)
     assert r_avg.mean_interruption_h <= r_reactive.mean_interruption_h * 1.05
 
@@ -67,7 +67,7 @@ def test_rl_end_to_end_improves_over_never_submitting(setup):
     learner = DQNLearner(fc, DQNConfig(batch_size=8), seed=0, params=params)
     rets = train_online_dqn(env, learner, episodes=4, seed=0)
     assert all(np.isfinite(rets))
-    res = _evaluate(env, MiragePolicy("transformer+dqn", learner=learner),
+    res = _evaluate(env, LearnerPolicy("transformer+dqn", learner),
                     episodes=4, seed=13)
     s = res.summary()
     assert np.isfinite(s["mean_interruption_h"])

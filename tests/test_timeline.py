@@ -6,14 +6,13 @@ surface (``make_env``/``make_vector_env`` factories, ``schedule_view``,
 ``resized``) must uphold its contracts.
 """
 import copy
-import warnings
 
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import EnvConfig, ProvisionEnv
-from repro.core.provisioner import ReplayCheckpointCache, _sim_nbytes
+from repro.core.provisioner import ReplayCheckpointCache
 from repro.sim import (FaultPlan, SlurmSimulator, get_fault_spec, make_env,
                        make_vector_env, synthesize_trace)
 from repro.sim.faults import FAIL, REPAIR
@@ -177,17 +176,6 @@ def test_schedule_view_read_only(trace_cfg):
     # the freeze is a view property: the simulator's own buffers stay
     # writeable (freezing them would break the engine itself)
     assert sim._start.flags.writeable
-
-
-def test_sim_nbytes_deprecation_shim(trace_cfg):
-    """The one-release shim for the retired private-array read: warns,
-    and returns exactly what the supported accessor reports."""
-    jobs, cfg = trace_cfg
-    sim = SlurmSimulator(cfg.n_nodes, mode="fast")
-    sim.load([copy.copy(j) for j in jobs])
-    with pytest.warns(DeprecationWarning):
-        n = _sim_nbytes(sim)
-    assert n == sim.fork_nbytes()
 
 
 def test_factory_overrides_do_not_mutate_cfg(trace_cfg):
